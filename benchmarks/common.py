@@ -1,0 +1,65 @@
+"""Shared benchmark utilities: timing, the evaluation suite, CSV output."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core.matrices import make_suite
+from repro.core.search import SearchConfig
+
+# scale knob: REPRO_BENCH_SCALE=quick|full
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "quick")
+
+
+def bench_suite():
+    return make_suite("small" if SCALE == "quick" else "medium")
+
+
+def search_budget() -> SearchConfig:
+    if SCALE == "quick":
+        return SearchConfig(max_seconds=20, max_structures=8,
+                            coarse_samples=4, fine_eval_budget=4,
+                            timing_repeats=2, seed=0)
+    return SearchConfig(max_seconds=120, max_structures=20,
+                        coarse_samples=8, fine_eval_budget=10,
+                        timing_repeats=3, seed=0)
+
+
+_SEARCH_CACHE: dict = {}
+
+
+def cached_search(name: str, m):
+    """Search results are deterministic per (matrix, budget); fig9/10/12/
+    creativity share one search per matrix via this cache."""
+    key = (name, SCALE)
+    if key not in _SEARCH_CACHE:
+        from repro.core.search import search
+        _SEARCH_CACHE[key] = search(m, search_budget())
+    return _SEARCH_CACHE[key]
+
+
+def time_call(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Min wall seconds over repeats of a blocking call."""
+    for _ in range(warmup):
+        r = fn(*args)
+        if hasattr(r, "block_until_ready"):
+            r.block_until_ready()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        if hasattr(r, "block_until_ready"):
+            r.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def gflops(nnz: int, seconds: float) -> float:
+    return 2.0 * nnz / seconds / 1e9
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The scaffold's required CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,59 @@
+"""Paper Fig. 12: AlphaSparse vs a tensor-algebra-compiler baseline.
+
+TACO generates row-loop CSR code with generic (non-SpMV-specialised, non-
+GPU-tuned) structure. The JAX analogue of "compiler-default, untuned" is
+a per-row ``lax.map`` over CSR rows with a fixed-width gather — correct,
+compiler-generated control flow, no format/layout tuning. Paper: 18.1x
+average speedup (up to 950x), biggest wins on irregular matrices.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+from .common import bench_suite, cached_search, emit, gflops, time_call
+
+
+def build_naive_rowloop(m):
+    """Untuned compiler-style SpMV: dense row-loop over padded CSR rows."""
+    lengths = m.row_lengths()
+    w = max(1, int(lengths.max()))
+    rp = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int64)
+    pos = np.arange(m.nnz) - rp[m.rows]
+    cols = np.zeros((m.n_rows, w), np.int32)
+    vals = np.zeros((m.n_rows, w), np.float32)
+    cols[m.rows, pos] = m.cols
+    vals[m.rows, pos] = m.vals
+    cols_j, vals_j = jnp.asarray(cols), jnp.asarray(vals)
+
+    @jax.jit
+    def fn(x):
+        def row(cv):
+            c, v = cv
+            return jnp.dot(v, x[c])
+        return jax.lax.map(row, (cols_j, vals_j))
+
+    return fn
+
+
+def run() -> dict:
+    suite = bench_suite()
+    speedups = []
+    for name, m in suite.items():
+        x = np.random.default_rng(0).standard_normal(m.n_cols).astype(
+            np.float32)
+        naive = build_naive_rowloop(m)
+        t_naive = time_call(naive, x, repeats=2, warmup=1)
+        res = cached_search(name, m)
+        t_alpha = time_call(res.best_program, x, repeats=3)
+        speedups.append(t_naive / t_alpha)
+        emit(f"fig12.{name}", t_alpha * 1e6,
+             f"speedup_vs_compiler={t_naive / t_alpha:.1f};"
+             f"naive_gflops={gflops(m.nnz, t_naive):.4f};"
+             f"row_var={m.row_variance():.1f}")
+    s = np.array(speedups)
+    emit("fig12.summary", 0.0,
+         f"geomean={np.exp(np.mean(np.log(s))):.1f};max={s.max():.1f}")
+    return {"speedups": speedups}

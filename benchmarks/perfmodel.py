@@ -1,0 +1,157 @@
+"""Analytic FLOP / HBM-byte model per (arch x shape cell).
+
+Why analytic: the CPU-backend ``cost_analysis()`` counts ``while``-loop
+(scan) bodies ONCE regardless of trip count (verified by the scan-unroll
+experiment recorded in EXPERIMENTS.md §Dry-run), so raw HLO numbers
+undercount layer-stacked work by ~n_blocks x. The roofline compute/memory
+terms therefore come from the closed-form model below; the parsed HLO
+collective schedule (which we trip-correct explicitly) supplies the
+collective term, and raw HLO numbers are reported alongside as a
+cross-check.
+
+Conventions: FLOPs are global per step; bytes are global per step
+(per-device = global / chips under SPMD). bf16 compute, fp32 optimizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models.model import padded_vocab, pattern_specs, n_blocks
+
+BF16 = 2
+F32 = 4
+
+
+@dataclasses.dataclass
+class CellCost:
+    flops: float            # total executed FLOPs (incl. remat recompute)
+    hbm_bytes: float        # total HBM traffic
+    model_flops: float      # 6*N(_active)*D — the "useful" reference
+    notes: str = ""
+
+
+def _layer_param_counts(cfg: ArchConfig):
+    """(attn_params, mamba_params, mlp_params, moe_active, moe_total,
+    shared_params) per single layer."""
+    d = cfg.d_model
+    hd = cfg.hd
+    attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd \
+        + cfg.n_heads * hd * d
+    mamba = 0
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        d_in = s.expand * d
+        H = d_in // s.head_dim
+        mamba = d * (2 * d_in + 2 * s.d_state + H) + d_in * d
+    n_mats = 3 if cfg.mlp_kind == "swiglu" else 2
+    mlp = n_mats * d * cfg.d_ff
+    moe_active = moe_total = shared = 0
+    if cfg.moe is not None:
+        e = cfg.moe
+        moe_total = e.n_experts * n_mats * d * e.d_expert
+        moe_active = e.top_k * e.capacity_factor * n_mats * d * e.d_expert
+        shared = e.n_shared * n_mats * d * e.d_expert
+    return attn, mamba, mlp, moe_active, moe_total, shared
+
+
+def forward_flops(cfg: ArchConfig, batch: int, seq: int,
+                  logits_positions: int | None = None) -> float:
+    """One forward pass over (batch, seq) tokens (+ modality prefix)."""
+    s_total = seq + cfg.n_prefix
+    tok = batch * s_total
+    attn_p, mamba_p, mlp_p, moe_a, _, shared_p = _layer_param_counts(cfg)
+    total = 0.0
+    for i, spec in enumerate(pattern_specs(cfg) * n_blocks(cfg)):
+        if spec.kind == "A":
+            total += 2 * tok * attn_p
+            # scores + AV (causal ~ /2); window caps the kv range
+            kv_span = min(s_total, cfg.window or s_total)
+            total += 2 * 2 * batch * s_total * kv_span \
+                * cfg.n_heads * cfg.hd * 0.5
+        else:
+            total += 2 * tok * mamba_p
+            s_cfg = cfg.ssm
+            d_in = s_cfg.expand * cfg.d_model
+            H = d_in // s_cfg.head_dim
+            q = min(s_cfg.chunk, s_total)
+            # SSD: intra-chunk (CB^T, L*X) ~ Q*(N + H*P) per token +
+            # inter-chunk state update ~ N*P per token-head
+            total += 2 * tok * q * (s_cfg.d_state + d_in) * 0.5
+            total += 2 * tok * H * s_cfg.head_dim * s_cfg.d_state * 2
+        if spec.ffn == "mlp":
+            total += 2 * tok * mlp_p
+        elif spec.ffn == "moe":
+            total += 2 * tok * (moe_a + shared_p)
+            total += 2 * tok * cfg.d_model * cfg.moe.n_experts  # router
+    # lm head (logits for all positions in train, 1 in prefill)
+    lp = logits_positions if logits_positions is not None else batch * seq
+    total += 2 * lp * cfg.d_model * padded_vocab(cfg)
+    return total
+
+
+def n_active(cfg: ArchConfig) -> int:
+    return cfg.active_params_per_token()
+
+
+def cost_for(cfg: ArchConfig, cell: ShapeCell, chips: int,
+             remat: bool = True, fsdp: bool = True) -> CellCost:
+    B, S = cell.global_batch, cell.seq_len
+    d_tok = B * S
+    n_params = cfg.n_params()
+    act_unit = B * (S + cfg.n_prefix) * cfg.d_model * BF16  # one (B,S,d) tensor
+
+    if cell.kind == "train":
+        fwd = forward_flops(cfg, B, S)
+        mult = 3.0 + (1.0 if remat else 0.0)     # fwd + 2x bwd + remat fwd
+        flops = fwd * mult
+        model_flops = 6.0 * n_active(cfg) * d_tok
+        # HBM traffic:
+        #  - weights: FSDP gathers full layer weights per device per pass
+        #    (write + read) x (fwd, bwd, remat) in bf16
+        w_traffic = chips * n_params * BF16 * 2 * (3 if remat else 2)
+        #  - optimizer: read p,m,v,g + write p,m,v in fp32 (sharded: global
+        #    = N regardless of chips)
+        opt_traffic = n_params * F32 * 7
+        #  - activations: ~14 live (B,S,d)-sized tensors per layer fwd,
+        #    x2 for bwd reads (with remat only boundaries persist)
+        act_traffic = cfg.n_layers * act_unit * (14 if not remat else 6) * 3
+        return CellCost(flops, w_traffic + opt_traffic + act_traffic,
+                        model_flops, "train: fwd+bwd+remat")
+
+    if cell.kind == "prefill":
+        flops = forward_flops(cfg, B, S, logits_positions=B)
+        model_flops = 2.0 * n_active(cfg) * d_tok
+        w_traffic = chips * n_params * BF16      # gathered weights read once
+        act_traffic = cfg.n_layers * act_unit * 8
+        cache_write = _cache_bytes(cfg, B, S)
+        return CellCost(flops, w_traffic + act_traffic + cache_write,
+                        model_flops, "prefill")
+
+    # decode: one token, cache length S
+    flops = forward_flops(cfg, B, 1, logits_positions=B)
+    # attention over the cache
+    kv_span = min(S, cfg.window or S)
+    n_attn = sum(1 for s_ in pattern_specs(cfg) * n_blocks(cfg)
+                 if s_.kind == "A")
+    flops += n_attn * 2 * 2 * B * kv_span * cfg.n_heads * cfg.hd
+    model_flops = 2.0 * n_active(cfg) * B
+    w_traffic = chips * n_params * BF16           # every step re-reads weights
+    cache_traffic = _cache_bytes(cfg, B, S)       # read K,V (or states)
+    return CellCost(flops, w_traffic + cache_traffic, model_flops,
+                    f"decode: cache_span={kv_span}")
+
+
+def _cache_bytes(cfg: ArchConfig, batch: int, s_cache: int) -> float:
+    total = 0.0
+    for spec in pattern_specs(cfg) * n_blocks(cfg):
+        if spec.kind == "A":
+            span = min(s_cache, cfg.window or s_cache)
+            total += 2 * batch * span * cfg.n_kv_heads * cfg.hd * BF16
+        else:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            H = d_in // s.head_dim
+            total += batch * H * s.head_dim * s.d_state * BF16
+            total += batch * (d_in + 2 * s.d_state) * (s.conv_width - 1) * BF16
+    return total

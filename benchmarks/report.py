@@ -1,0 +1,96 @@
+"""Generate the EXPERIMENTS.md tables from recorded artifacts.
+
+Reads results/dryrun/*.json (+ results/hillclimb/*.json when present) and
+writes markdown fragments to results/report/. Run after dry-runs finish:
+
+  PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from pathlib import Path
+
+from repro.configs import REGISTRY, cells_for
+
+from . import perfmodel, roofline
+
+OUT = Path("results/report")
+
+
+def _load(variant: str, mesh: str = "pod16x16"):
+    recs = []
+    for p in sorted(Path("results/dryrun").glob(f"*.{mesh}*.json")):
+        suffix = p.name.removeprefix(p.name.split(".")[0] + ".")
+        is_opt = p.name.endswith(".opt.json")
+        if (variant == "opt") != is_opt:
+            continue
+        rec = json.loads(p.read_text())
+        if rec.get("ok"):
+            recs.append(rec)
+    return recs
+
+
+def dryrun_table(variant: str) -> str:
+    rows = []
+    for rec in _load(variant):
+        m = rec["memory"]
+        c = rec["collectives"]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['compile_s']}s "
+            f"| {rec['flops']:.2e} | {m['temp_bytes'] / 2**30:.1f} GiB "
+            f"| {(m['argument_bytes']) / 2**30:.1f} GiB "
+            f"| {c['total_bytes']:.2e} "
+            f"| ar {c['all-reduce']['count']} / ag {c['all-gather']['count']}"
+            f" / a2a {c['all-to-all']['count']} |")
+    head = ("| arch | shape | compile | HLO flops/dev (body-once) | temp/dev "
+            "| args/dev | coll B/dev | collective ops |\n" + "|---" * 8 + "|")
+    return head + "\n" + "\n".join(rows) + "\n"
+
+
+def roofline_table(variant: str) -> str:
+    recs = _load(variant)
+    rows = [roofline.analyse_record(r) for r in recs]
+    doms = Counter(r["dominant"] for r in rows)
+    return (roofline.markdown_table(rows)
+            + f"\ndominant-term histogram: {dict(doms)}\n")
+
+
+def multipod_check() -> str:
+    base = {(r["arch"], r["shape"]) for r in _load("base", "pod16x16")}
+    multi = {(r["arch"], r["shape"]) for r in _load("base", "pod2x16x16")}
+    missing = base - multi
+    return (f"single-pod cells: {len(base)}; multi-pod cells: {len(multi)}; "
+            f"missing multi-pod: {sorted(missing) or 'none'}\n")
+
+
+def hillclimb_table() -> str:
+    hc = Path("results/hillclimb")
+    if not hc.exists():
+        return "(hillclimb records not yet generated)\n"
+    lines = ["| iteration | HLO flops/dev | coll B/dev | temp/dev |",
+             "|---|---|---|---|"]
+    def fmt(v):
+        return f"{v:.3e}" if isinstance(v, (int, float)) else "-"
+
+    for p in sorted(hc.glob("*.json")):
+        r = json.loads(p.read_text())
+        lines.append(f"| {r['tag']} | {fmt(r.get('flops'))} "
+                     f"| {fmt(r['collectives']['total_bytes'])} "
+                     f"| {fmt(r.get('temp_bytes'))} |")
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "dryrun_base.md").write_text(dryrun_table("base"))
+    (OUT / "dryrun_opt.md").write_text(dryrun_table("opt"))
+    (OUT / "roofline_base.md").write_text(roofline_table("base"))
+    (OUT / "roofline_opt.md").write_text(roofline_table("opt"))
+    (OUT / "multipod.md").write_text(multipod_check())
+    (OUT / "hillclimb.md").write_text(hillclimb_table())
+    print("wrote", sorted(str(p) for p in OUT.glob("*.md")))
+
+
+if __name__ == "__main__":
+    main()

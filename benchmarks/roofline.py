@@ -1,0 +1,100 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the dry-run artifacts + the analytic perf model.
+
+  compute term    = FLOPs / (chips x 197 TFLOP/s bf16)
+  memory term     = HBM bytes / (chips x 819 GB/s)
+  collective term = per-chip collective bytes / 50 GB/s/link
+
+FLOPs and HBM bytes come from ``perfmodel`` (closed-form; the CPU backend's
+cost_analysis counts scan bodies once — see EXPERIMENTS.md); collective
+bytes come from the partitioned HLO with explicit trip-count correction.
+Raw HLO numbers are carried along as a cross-check column.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import REGISTRY, cells_for
+
+from . import perfmodel
+from .common import emit
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+DRYRUN_DIR = Path("results/dryrun")
+
+
+def analyse_record(rec: dict) -> dict:
+    cfg = REGISTRY[rec["arch"]]
+    cell = next(c for c in cells_for(cfg) if c.name == rec["shape"])
+    chips = rec["chips"]
+    cost = perfmodel.cost_for(cfg, cell, chips)
+    t_compute = cost.flops / (chips * PEAK_FLOPS)
+    t_memory = cost.hbm_bytes / (chips * HBM_BW)
+    coll_per_chip = rec.get("collectives", {}).get("total_bytes", 0)
+    t_coll = coll_per_chip / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # roofline fraction: useful model flops time over the bounding term
+    t_model = cost.model_flops / (chips * PEAK_FLOPS)
+    frac = t_model / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": cost.model_flops,
+        "exec_flops": cost.flops,
+        "useful_ratio": cost.model_flops / cost.flops if cost.flops else 0,
+        "roofline_fraction": frac,
+        "hlo_flops_raw_per_dev": rec.get("flops", 0.0),
+        "hlo_bytes_raw_per_dev": rec.get("bytes_accessed", 0.0),
+        "collective_bytes_per_dev": coll_per_chip,
+        "step_time_bound_s": bound,
+    }
+
+
+def load_records(mesh: str = "pod16x16") -> list[dict]:
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob(f"*.{mesh}.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("ok"):
+            recs.append(rec)
+    return recs
+
+
+def run(mesh: str = "pod16x16") -> list[dict]:
+    rows = [analyse_record(r) for r in load_records(mesh)]
+    for r in rows:
+        emit(f"roofline.{r['arch']}.{r['shape']}",
+             r["step_time_bound_s"] * 1e6,
+             f"dominant={r['dominant']};"
+             f"compute_s={r['compute_s']:.3e};"
+             f"memory_s={r['memory_s']:.3e};"
+             f"collective_s={r['collective_s']:.3e};"
+             f"useful_ratio={r['useful_ratio']:.2f};"
+             f"roofline_fraction={r['roofline_fraction']:.3f}")
+    if rows:
+        from collections import Counter
+        doms = Counter(r["dominant"] for r in rows)
+        emit("roofline.summary", 0.0,
+             f"cells={len(rows)};dominant_histogram={dict(doms)}")
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    head = ("| arch | shape | dominant | compute s | memory s | collective s"
+            " | MODEL/HLO-exec | roofline frac |\n"
+            "|---|---|---|---|---|---|---|---|\n")
+    body = "".join(
+        f"| {r['arch']} | {r['shape']} | **{r['dominant']}** "
+        f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+        f"| {r['collective_s']:.3e} | {r['useful_ratio']:.2f} "
+        f"| {r['roofline_fraction']:.3f} |\n"
+        for r in rows)
+    return head + body

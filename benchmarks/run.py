@@ -1,0 +1,46 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (scaffold contract).
+Scale with REPRO_BENCH_SCALE=quick|full (default quick);
+select with REPRO_BENCH_ONLY=fig9,roofline,...
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    only = os.environ.get("REPRO_BENCH_ONLY")
+    selected = set(only.split(",")) if only else None
+
+    from . import (creativity, fig9_formats, fig10_pfs, fig12_compiler,
+                   fig13_search, roofline, table3_pruning)
+
+    benches = {
+        "fig9": fig9_formats.run,        # vs artificial formats
+        "fig10": fig10_pfs.run,          # vs Perfect Format Selector
+        "fig12": fig12_compiler.run,     # vs compiler baseline
+        "fig13": fig13_search.run,       # search iterations vs irregularity
+        "table3": table3_pruning.run,    # pruning ablation
+        "creativity": creativity.run,    # machine-designed fraction
+        "roofline": roofline.run,        # dry-run roofline terms
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if selected and name not in selected:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"{name}.done,{(time.time() - t0) * 1e6:.0f},ok",
+                  flush=True)
+        except Exception as e:  # keep the harness going; record the failure
+            print(f"{name}.error,0,{type(e).__name__}:{e}", flush=True)
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

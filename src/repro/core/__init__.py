@@ -1,0 +1,8 @@
+"""AlphaSparse core: Operator Graph, Designer, Format & Kernel Generator,
+Search Engine (paper sections IV-VI), adapted to TPU (DESIGN.md)."""
+from .matrices import SparseMatrix, make_suite, read_matrix_market  # noqa: F401
+from .metadata import MetadataSet, from_matrix  # noqa: F401
+from .operators import OPERATORS, OpSpec  # noqa: F401
+from .graph import OperatorGraph, GraphError, run_graph  # noqa: F401
+from .kernel_builder import SpmvProgram, build_spmv  # noqa: F401
+from .search import AlphaSparseSearch, SearchConfig, SearchResult, search  # noqa: F401

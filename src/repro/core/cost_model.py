@@ -1,0 +1,176 @@
+"""Lightweight ML cost model (paper §VI-A level 3).
+
+The paper uses XGBoost to interpolate measured coarse-grid timings onto a
+fine parameter grid ("mean absolute deviation of 5%, less than GPU
+volatility"). We implement a dependency-free gradient-boosted regression
+tree ensemble in numpy with the same role; the paper's rationale applies
+unchanged: memory-bound programs have piecewise-linear cost boundaries,
+which tree ensembles fit well.
+
+Features are derived from the *structural* properties of a generated
+program (padding ratio, stored bytes, tile geometry, reduce kind) plus
+matrix statistics — all available without running the kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["GBTRegressor", "program_features", "FEATURE_NAMES"]
+
+
+# ----------------------------- tree ensemble ------------------------------
+
+@dataclasses.dataclass
+class _Node:
+    feature: int = -1
+    threshold: float = 0.0
+    left: int = -1
+    right: int = -1
+    value: float = 0.0
+
+
+class _Tree:
+    def __init__(self, max_depth: int, min_leaf: int):
+        self.max_depth = max_depth
+        self.min_leaf = min_leaf
+        self.nodes: list[_Node] = []
+
+    def fit(self, X: np.ndarray, g: np.ndarray) -> "_Tree":
+        self._build(X, g, np.arange(X.shape[0]), 0)
+        return self
+
+    def _build(self, X, g, idx, depth) -> int:
+        node_id = len(self.nodes)
+        self.nodes.append(_Node(value=float(g[idx].mean())))
+        if depth >= self.max_depth or idx.size < 2 * self.min_leaf:
+            return node_id
+        best = None  # (gain, feature, threshold, left_idx, right_idx)
+        base = g[idx].sum() ** 2 / idx.size
+        for f in range(X.shape[1]):
+            xs = X[idx, f]
+            order = np.argsort(xs, kind="stable")
+            xs_s, g_s = xs[order], g[idx][order]
+            csum = np.cumsum(g_s)
+            total = csum[-1]
+            n = idx.size
+            ks = np.arange(self.min_leaf, n - self.min_leaf)
+            if ks.size == 0:
+                continue
+            valid = xs_s[ks - 1] < xs_s[ks]  # only split between distinct values
+            if not valid.any():
+                continue
+            ks = ks[valid]
+            left = csum[ks - 1]
+            gain = left**2 / ks + (total - left) ** 2 / (n - ks) - base
+            k = ks[np.argmax(gain)]
+            gn = float(gain.max())
+            if best is None or gn > best[0]:
+                thr = 0.5 * (xs_s[k - 1] + xs_s[k])
+                mask = X[idx, f] <= thr
+                best = (gn, f, thr, idx[mask], idx[~mask])
+        if best is None or best[0] <= 1e-12:
+            return node_id
+        _, f, thr, li, ri = best
+        node = self.nodes[node_id]
+        node.feature, node.threshold = f, thr
+        node.left = self._build(X, g, li, depth + 1)
+        node.right = self._build(X, g, ri, depth + 1)
+        return node_id
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        out = np.empty(X.shape[0])
+        for i, x in enumerate(X):
+            n = 0
+            while self.nodes[n].feature >= 0:
+                node = self.nodes[n]
+                n = node.left if x[node.feature] <= node.threshold else node.right
+            out[i] = self.nodes[n].value
+        return out
+
+
+class GBTRegressor:
+    """Least-squares gradient boosting on log-time targets."""
+
+    def __init__(self, n_trees: int = 60, lr: float = 0.15, max_depth: int = 3,
+                 min_leaf: int = 2):
+        self.n_trees, self.lr = n_trees, lr
+        self.max_depth, self.min_leaf = max_depth, min_leaf
+        self.trees: list[_Tree] = []
+        self.base = 0.0
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "GBTRegressor":
+        X = np.asarray(X, np.float64)
+        y = np.asarray(y, np.float64)
+        self.base = float(y.mean())
+        pred = np.full_like(y, self.base)
+        self.trees = []
+        for _ in range(self.n_trees):
+            resid = y - pred
+            t = _Tree(self.max_depth, self.min_leaf).fit(X, resid)
+            pred = pred + self.lr * t.predict(X)
+            self.trees.append(t)
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, np.float64)
+        pred = np.full(X.shape[0], self.base)
+        for t in self.trees:
+            pred = pred + self.lr * t.predict(X)
+        return pred
+
+    def mad(self, X, y) -> float:
+        """Mean absolute deviation in relative terms (paper reports 5%)."""
+        p = self.predict(X)
+        return float(np.mean(np.abs(p - y) / np.maximum(np.abs(y), 1e-12)))
+
+
+# ------------------------------- features ---------------------------------
+
+FEATURE_NAMES = [
+    "log_nnz", "log_rows", "log_cols", "avg_row_len", "log_row_var",
+    "pad_ratio", "bytes_per_nnz", "n_blocks", "n_buckets", "tile_rows",
+    "mean_width", "chunk", "seg_rows", "red_lane", "red_seg", "red_onehot",
+    "red_atom", "comb_grid_acc", "sorted_any", "binned", "coldiv",
+]
+
+_REDUCE_ONE_HOT = {"lane_total": (1, 0, 0, 0), "seg_scan": (0, 1, 0, 0),
+                   "onehot_mxu": (0, 0, 1, 0), "gmem_atom": (0, 0, 0, 1)}
+
+
+def program_features(meta, program) -> np.ndarray:
+    """Structural feature vector for the cost model (no execution needed)."""
+    from .metadata import EllTileLayout, SegTileLayout  # local import (cycle)
+
+    nnz = max(meta.nnz, 1)
+    lengths = np.concatenate([b.row_lengths() for b in meta.blocks])
+    row_var = float(np.var(lengths)) if lengths.size else 0.0
+    n_buckets, tile_rows, widths, chunk, seg_rows = 0, [], [], 0, 0
+    red = np.zeros(4)
+    comb_acc = 0
+    for b in meta.blocks:
+        if isinstance(b.layout, EllTileLayout):
+            n_buckets += len(b.layout.buckets)
+            tile_rows.append(b.layout.tile_rows)
+            widths.extend(bk.width for bk in b.layout.buckets)
+        elif isinstance(b.layout, SegTileLayout):
+            chunk = max(chunk, int(np.prod(b.layout.vals.shape[1:])))
+            seg_rows = max(seg_rows, b.layout.seg_rows)
+        if b.reduce is not None:
+            red = red + np.array(_REDUCE_ONE_HOT[b.reduce.kind])
+            comb_acc += int(b.reduce.combine == "grid_acc")
+    hist = " ".join(meta.history)
+    return np.array([
+        np.log10(nnz), np.log10(max(meta.n_rows, 1)),
+        np.log10(max(meta.n_cols, 1)), nnz / max(meta.n_rows, 1),
+        np.log10(1.0 + row_var),
+        meta.padded_nnz() / nnz,
+        program.stored_bytes / nnz,
+        len(meta.blocks), n_buckets,
+        float(np.mean(tile_rows)) if tile_rows else 0.0,
+        float(np.mean(widths)) if widths else 0.0,
+        float(chunk), float(seg_rows),
+        *(red > 0).astype(float), float(comb_acc > 0),
+        float("SORT" in hist), float("BIN" in hist), float("COL_DIV" in hist),
+    ], dtype=np.float64)

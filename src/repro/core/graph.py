@@ -1,0 +1,145 @@
+"""Operator Graph (paper §IV-B).
+
+A graph is: a *converting chain* applied to the whole matrix (COMPRESS first,
+then reordering / dividing operators — dividing operators branch the graph),
+followed by a mapping+implementing chain. When the converting stage produced
+branches (BIN / ROW_DIV / COL_DIV), the mapping+implementing chain may be
+*shared* across branches or *per-branch* (the paper's "branches appear in
+Operator Graphs ... different formats for different parts", §VII-G).
+
+Graphs are hashable value objects: the search engine memoises on them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .metadata import MetadataSet, from_matrix
+from .matrices import SparseMatrix
+from .operators import (OPERATORS, STAGE_CONVERTING, STAGE_IMPLEMENTING,
+                        STAGE_MAPPING, OpSpec, apply_op)
+
+__all__ = ["OperatorGraph", "GraphError", "run_graph"]
+
+
+class GraphError(ValueError):
+    """Raised when an Operator Graph violates operator dependencies."""
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class OperatorGraph:
+    converting: tuple[OpSpec, ...]
+    # either one shared chain, or one chain per branch (len == n branches)
+    branch_chains: tuple[tuple[OpSpec, ...], ...]
+    shared: bool = True
+
+    @staticmethod
+    def chain(*specs: OpSpec) -> "OperatorGraph":
+        """Convenience: linear graph, converting ops auto-split from the rest."""
+        conv = tuple(s for s in specs
+                     if OPERATORS[s.name].stage == STAGE_CONVERTING)
+        rest = tuple(s for s in specs
+                     if OPERATORS[s.name].stage != STAGE_CONVERTING)
+        return OperatorGraph(converting=conv, branch_chains=(rest,), shared=True)
+
+    def all_ops(self) -> tuple[OpSpec, ...]:
+        out = list(self.converting)
+        for c in self.branch_chains:
+            out.extend(c)
+        return tuple(out)
+
+    def op_names(self) -> tuple[str, ...]:
+        return tuple(s.name for s in self.all_ops())
+
+    def has_branches(self) -> bool:
+        return (not self.shared) or any(
+            s.name in ("BIN", "ROW_DIV", "COL_DIV", "HYB_SPLIT")
+            for s in self.converting)
+
+    def label(self) -> str:
+        conv = " -> ".join(s.label() for s in self.converting)
+        if self.shared:
+            body = " -> ".join(s.label() for s in self.branch_chains[0])
+            return f"[{conv}] => [{body}]"
+        bodies = " | ".join(" -> ".join(s.label() for s in c)
+                            for c in self.branch_chains)
+        return f"[{conv}] => branches({bodies})"
+
+    def validate(self) -> None:
+        if not self.converting or self.converting[0].name != "COMPRESS":
+            raise GraphError("graph must start with COMPRESS (paper §IV-A: "
+                             "the mapping stage always begins after COMPRESS)")
+        for s in self.converting:
+            if OPERATORS[s.name].stage != STAGE_CONVERTING:
+                raise GraphError(f"{s.name} is not a converting operator")
+        dividers = [s.name for s in self.converting
+                    if s.name in ("BIN", "ROW_DIV", "COL_DIV", "HYB_SPLIT")]
+        if len(dividers) > 1:
+            raise GraphError("at most one dividing operator per graph "
+                             "(prototype scope, matches paper examples)")
+        if not self.shared and not dividers:
+            raise GraphError("per-branch chains require a dividing operator")
+        for chain in self.branch_chains:
+            stages = [OPERATORS[s.name].stage for s in chain]
+            if STAGE_CONVERTING in stages:
+                raise GraphError("converting op inside a branch chain")
+            # mapping ops must precede implementing ops
+            seen_impl = False
+            for st in stages:
+                if st == STAGE_IMPLEMENTING:
+                    seen_impl = True
+                elif seen_impl:
+                    raise GraphError("mapping op after implementing op")
+            layout_builders = [s.name for s in chain
+                               if s.name in ("LANE_ROW_BLOCK", "LANE_NNZ_BLOCK")]
+            if len(layout_builders) != 1:
+                raise GraphError("each branch chain needs exactly one layout "
+                                 "builder (LANE_ROW_BLOCK | LANE_NNZ_BLOCK)")
+            reducers = [s.name for s in chain if s.name.endswith("_RED")]
+            if len(reducers) != 1:
+                raise GraphError("each branch chain needs exactly one reducer")
+            lb, red = layout_builders[0], reducers[0]
+            legal = {"LANE_ROW_BLOCK": {"LANE_TOTAL_RED"},
+                     "LANE_NNZ_BLOCK": {"SEG_SCAN_RED", "ONEHOT_MXU_RED",
+                                        "GMEM_ATOM_RED"}}
+            if red not in legal[lb]:
+                raise GraphError(f"{red} cannot follow {lb} "
+                                 "(operator dependency, paper §IV-B)")
+            if "SORT_TILE" in (s.name for s in chain) and \
+                    "TILE_ROW_BLOCK" not in (s.name for s in chain):
+                raise GraphError("SORT_TILE requires TILE_ROW_BLOCK")
+            # mapping order: tiling/padding decisions before the layout build
+            lb_idx = next(i for i, s in enumerate(chain)
+                          if s.name == layout_builders[0])
+            for i, s in enumerate(chain):
+                if s.name in ("TILE_ROW_BLOCK", "LANE_PAD", "SORT_TILE") \
+                        and i > lb_idx:
+                    raise GraphError(f"{s.name} after layout builder")
+
+
+def run_graph(matrix: SparseMatrix, graph: OperatorGraph) -> MetadataSet:
+    """The Designer (paper §IV): execute operators in order on the metadata."""
+    graph.validate()
+    meta = from_matrix(matrix)
+    for spec in graph.converting:
+        if not OPERATORS[spec.name].applicable(meta):
+            raise GraphError(f"{spec.name} not applicable at this point")
+        meta = apply_op(meta, spec)
+
+    if graph.shared:
+        for spec in graph.branch_chains[0]:
+            meta = apply_op(meta, spec)
+        return meta
+
+    if len(graph.branch_chains) != len(meta.blocks):
+        raise GraphError(
+            f"{len(graph.branch_chains)} branch chains for {len(meta.blocks)}"
+            " branches")
+    # run each branch chain on a single-block view, then re-join
+    out_blocks = []
+    for block, chain in zip(meta.blocks, graph.branch_chains):
+        sub = dataclasses.replace(meta, blocks=(block,))
+        for spec in chain:
+            sub = apply_op(sub, spec)
+        out_blocks.append(sub.blocks[0])
+    return meta.with_blocks(out_blocks, "JOIN")

@@ -1,0 +1,249 @@
+"""Format & Kernel Generator (paper §V): project an executed Operator Graph
+(i.e. a MetadataSet) onto a concrete format (arrays) + kernel (callable).
+
+The paper splices CUDA source fragments into a skeleton. Pallas is already a
+metaprogramming layer, so our "kernel fragments" are compile-time Python
+closures selected by the implementing-stage operators (DESIGN.md D2), and the
+"Adapter" fragments become layout conversions between tile partials and the
+output vector.
+
+Two backends share one plan:
+  * ``jax``    — pure-jnp program (the oracle; also what we time on CPU).
+  * ``pallas`` — the TPU kernels in ``repro.kernels`` (interpret=True on CPU).
+
+Model-Driven Format Compression (``compress.py``) runs here: fitted arrays
+are elided from the stored format and recomputed in-kernel; an affine rowmap
+upgrades the combine to GRID_ACC (direct output writes, no scatter).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import compress
+from .metadata import (Block, EllTileLayout, MetadataSet, SegTileLayout)
+
+__all__ = ["SpmvProgram", "build_spmv"]
+
+
+@dataclasses.dataclass
+class SpmvProgram:
+    """A generated SpMV program: format arrays + jitted kernel + report."""
+
+    n_rows: int
+    n_cols: int
+    nnz: int
+    fmt: dict                     # name -> jnp array (the stored format)
+    fn: Callable                  # fn(fmt, x) -> y  (jitted)
+    descriptor: dict              # structural report (kernels, combines, fits)
+
+    def __call__(self, x):
+        return self.fn(self.fmt, x)
+
+    @property
+    def stored_bytes(self) -> int:
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in self.fmt.values())
+
+    @property
+    def padded_nnz(self) -> int:
+        return self.descriptor["padded_nnz"]
+
+    def flops(self) -> int:
+        return 2 * self.nnz  # useful flops; padding waste is padded_nnz-based
+
+
+def _col_model_expr(model: compress.ArrayModel, shape):
+    """Recompute an elided int array inside the kernel (jnp, no exceptions)."""
+    i = jnp.arange(model.n, dtype=jnp.int32)
+    if model.kind == "linear":
+        a, b = model.params
+        v = a * i + b
+    elif model.kind == "step":
+        a, b, k = model.params
+        v = a * (i // k) + b
+    else:
+        a, b, c, p = model.params
+        v = a * (i % p) + c * (i // p) + b
+    return v.reshape(shape)
+
+
+def _plan_ell_block(bi: int, block: Block, n_rows: int, fmt: dict,
+                    descriptor: dict, do_compress: bool):
+    """Plan one ELL-layout block: returns a list of per-bucket closures."""
+    layout: EllTileLayout = block.layout
+    steps = []
+    for ki, bucket in enumerate(layout.buckets):
+        key = f"b{bi}k{ki}"
+        fmt[f"{key}_vals"] = jnp.asarray(bucket.vals)
+        rep = {"kernel": "ell", "width": bucket.width,
+               "tiles": bucket.n_tiles, "tile_rows": bucket.tile_rows}
+
+        # --- model-driven compression: cols ---
+        col_model = compress.fit_array(bucket.cols) if do_compress else None
+        if col_model is not None and col_model.n_exceptions == 0:
+            rep["cols"] = f"elided({col_model.kind})"
+            cols_ref = ("model", col_model, bucket.cols.shape)
+        else:
+            fmt[f"{key}_cols"] = jnp.asarray(bucket.cols)
+            cols_ref = ("array", f"{key}_cols", None)
+
+        # --- model-driven compression: rowmap -> combine upgrade ---
+        affine = compress.affine_rowmap(bucket.rowmap) if do_compress else None
+        want_direct = (block.reduce.combine == "grid_acc")
+        if affine is not None and affine[0] == 1:
+            a, b0 = affine
+            nv = int((bucket.rowmap.ravel() >= 0).sum())
+            rep["combine"] = "grid_acc" if want_direct else "scatter(affine)"
+            rep["rowmap"] = "elided(linear)"
+            if want_direct:
+                def combine_fn(y, partial, b0=b0, nv=nv):
+                    flat = partial.reshape(-1)[:nv]
+                    return y.at[b0:b0 + nv].add(flat)
+            else:
+                def combine_fn(y, partial, b0=b0, nv=nv):
+                    flat = partial.reshape(-1)[:nv]
+                    idx = b0 + jnp.arange(nv, dtype=jnp.int32)
+                    return y.at[idx].add(flat)
+            rowmap_key = None
+        else:
+            if want_direct:
+                rep["combine"] = "scatter(grid_acc-fallback: rowmap not affine)"
+            else:
+                rep["combine"] = "scatter"
+            rowmap_key = f"{key}_rowmap"
+            fmt[rowmap_key] = jnp.asarray(bucket.rowmap)
+            combine_fn = ("rowmap", rowmap_key)
+
+        steps.append(("ell", key, cols_ref, combine_fn, rep))
+        descriptor["blocks"].append(rep)
+    return steps
+
+
+def _plan_seg_block(bi: int, block: Block, fmt: dict, descriptor: dict,
+                    do_compress: bool):
+    layout: SegTileLayout = block.layout
+    key = f"b{bi}s"
+    fmt[f"{key}_vals"] = jnp.asarray(layout.vals)
+    rep = {"kernel": block.reduce.kind, "tiles": layout.n_tiles,
+           "seg_rows": layout.seg_rows, "combine": "scatter"}
+    if block.reduce.kind == "gmem_atom":
+        # GMEM_ATOM_RED stores the global row stream directly (Merge/COO
+        # style): no rowmap/descriptor arrays, no in-kernel row decode.
+        T = layout.vals.shape[0]
+        rows_global = np.take_along_axis(
+            layout.rowmap, layout.local_row.reshape(T, -1), axis=1)
+        fmt[f"{key}_rows"] = jnp.asarray(rows_global.astype(np.int32))
+        # without converting-stage reordering the row stream stays sorted,
+        # enabling the fast sorted-segment reduction
+        rep["rows_sorted"] = bool(np.all(np.diff(rows_global.ravel()) >= 0))
+        # pallas fallback (no TPU atomics) still needs the descriptor path
+        fmt[f"{key}_rowmap"] = jnp.asarray(layout.rowmap)
+        fmt[f"{key}_local"] = jnp.asarray(layout.local_row)
+        fmt[f"{key}_end"] = jnp.asarray(layout.seg_end)
+    else:
+        fmt[f"{key}_rowmap"] = jnp.asarray(layout.rowmap)
+        if block.reduce.kind == "onehot_mxu":
+            fmt[f"{key}_local"] = jnp.asarray(layout.local_row)
+        else:  # seg_scan consumes the CSR5-style segment descriptor
+            fmt[f"{key}_end"] = jnp.asarray(layout.seg_end)
+    col_model = compress.fit_array(layout.cols) if do_compress else None
+    if col_model is not None and col_model.n_exceptions == 0:
+        rep["cols"] = f"elided({col_model.kind})"
+        cols_ref = ("model", col_model, layout.cols.shape)
+    else:
+        fmt[f"{key}_cols"] = jnp.asarray(layout.cols)
+        cols_ref = ("array", f"{key}_cols", None)
+    descriptor["blocks"].append(rep)
+    return ("seg", key, cols_ref, block.reduce.kind, layout.seg_rows, rep)
+
+
+def build_spmv(meta: MetadataSet, backend: str = "jax",
+               interpret: bool = True, do_compress: bool = True,
+               jit: bool = True) -> SpmvProgram:
+    """Generate the SpMV program for a designed MetadataSet."""
+    for b in meta.blocks:
+        if b.layout is None or b.reduce is None:
+            raise ValueError("metadata not fully designed: run mapping and "
+                             "implementing operators first")
+    fmt: dict = {}
+    descriptor = {"backend": backend, "blocks": [],
+                  "padded_nnz": meta.padded_nnz(),
+                  "history": meta.history}
+    plans = []
+    for bi, block in enumerate(meta.blocks):
+        if isinstance(block.layout, EllTileLayout):
+            plans.extend(_plan_ell_block(bi, block, meta.n_rows, fmt,
+                                         descriptor, do_compress))
+        else:
+            plans.append(_plan_seg_block(bi, block, fmt, descriptor,
+                                         do_compress))
+
+    n_rows = meta.n_rows
+    if backend == "pallas":
+        from repro.kernels import ops as kops  # lazy: keeps core importable
+
+    def run(fmt, x):
+        y = jnp.zeros((n_rows,), dtype=jnp.float32)
+        for plan in plans:
+            if plan[0] == "ell":
+                _, key, cols_ref, combine_fn, rep = plan
+                vals = fmt[f"{key}_vals"]
+                cols = (fmt[cols_ref[1]] if cols_ref[0] == "array"
+                        else _col_model_expr(cols_ref[1], cols_ref[2]))
+                if backend == "pallas":
+                    if rep["combine"] == "grid_acc":
+                        # direct-write kernel: output slab, no scatter
+                        partial = kops.ell_spmv_direct(vals, cols, x,
+                                                       interpret=interpret)
+                    else:
+                        partial = kops.ell_spmv(vals, cols, x,
+                                                interpret=interpret)
+                else:
+                    partial = jnp.einsum("trw,trw->tr", vals, x[cols])
+                if isinstance(combine_fn, tuple):  # rowmap scatter
+                    rm = fmt[combine_fn[1]].reshape(-1)
+                    safe = jnp.where(rm >= 0, rm, n_rows)
+                    y = y.at[safe].add(partial.reshape(-1), mode="drop")
+                else:
+                    y = combine_fn(y, partial)
+            else:
+                _, key, cols_ref, kind, seg_rows, rep = plan
+                vals = fmt[f"{key}_vals"]
+                rm = fmt[f"{key}_rowmap"]
+                local = fmt.get(f"{key}_local")
+                seg_end = fmt.get(f"{key}_end")
+                cols = (fmt[cols_ref[1]] if cols_ref[0] == "array"
+                        else _col_model_expr(cols_ref[1], cols_ref[2]))
+                if kind == "gmem_atom" and backend != "pallas":
+                    # GMEM_ATOM_RED: one global reduction of the product
+                    # stream; rows stored directly in the format (padded
+                    # entries carry val=0 and a valid row -> no masking).
+                    prod = (vals * x[cols]).reshape(-1)
+                    rows = fmt[f"{key}_rows"].reshape(-1)
+                    y = y + jax.ops.segment_sum(
+                        prod, rows, num_segments=n_rows,
+                        indices_are_sorted=rep.get("rows_sorted", False))
+                    continue
+                if backend == "pallas":
+                    pk = "seg_scan" if kind == "gmem_atom" else kind
+                    partial = kops.seg_spmv(vals, cols, local, seg_end, x,
+                                            seg_rows, mode=pk,
+                                            interpret=interpret)
+                else:
+                    from repro.kernels import ref as kref
+                    partial = kref.seg_spmv_ref(vals, cols, local, seg_end,
+                                                x, seg_rows, mode=kind)
+                rmf = rm.reshape(-1)
+                safe = jnp.where(rmf >= 0, rmf, n_rows)
+                y = y.at[safe].add(partial.reshape(-1), mode="drop")
+        return y
+
+    fn = jax.jit(run) if jit else run
+    return SpmvProgram(n_rows=meta.n_rows, n_cols=meta.n_cols, nnz=meta.nnz,
+                       fmt=fmt, fn=fn, descriptor=descriptor)

@@ -1,0 +1,2 @@
+from .manager import (FaultToleranceConfig, FaultToleranceManager,  # noqa: F401
+                      NodeFailure, StragglerReport)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for AlphaSparse-generated formats.
+
+Each kernel family has: the ``pl.pallas_call`` implementation with explicit
+BlockSpec VMEM tiling (``ell_spmv.py``, ``seg_spmv.py``), a jitted wrapper
+(``ops.py``), and a pure-jnp oracle (``ref.py``). On CPU they run with
+``interpret=True``; on TPU the same entry points compile through Mosaic.
+"""
+from . import ops, ref  # noqa: F401
+from .ops import ell_spmv, ell_spmv_direct, seg_spmv  # noqa: F401

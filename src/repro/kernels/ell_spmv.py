@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: row-per-lane padded-tile SpMV (ELL / SELL family).
+
+TPU mapping (DESIGN.md §2): one grid step = one tile (the paper's BMTB),
+the R tile rows land on sublanes (BMW), the W padded nnz slots land on
+lanes (BMT). The x vector is VMEM-resident for the whole kernel — for
+matrices whose x exceeds VMEM, the COL_DIV converting operator stripes x
+so each stripe fits (format-level solution to a kernel-level constraint,
+which is exactly the paper's co-design thesis).
+
+The gather ``x[cols]`` lowers through ``jnp.take`` inside the kernel; on
+CPU we validate with ``interpret=True``. Grid iteration on TPU is
+sequential per core, so the ``direct`` (GRID_ACC) variant may revisit the
+same output block across steps without races.
+
+Block shapes: vals/cols blocks are (1, R, W); choose R a multiple of 8
+(sublanes) and W a multiple of 128 (lanes) via TILE_ROW_BLOCK / LANE_PAD
+for full VREG utilisation — the search engine tunes exactly these.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ell_spmv_pallas", "ell_spmv_direct_pallas"]
+
+
+def _ell_kernel(x_ref, vals_ref, cols_ref, out_ref):
+    """One tile: out[r] = sum_w vals[r, w] * x[cols[r, w]]."""
+    vals = vals_ref[0]              # (R, W)
+    cols = cols_ref[0]              # (R, W)
+    x = x_ref[...]                  # (n_cols,) VMEM-resident
+    gathered = jnp.take(x, cols, axis=0)
+    out_ref[0, :] = jnp.sum(vals * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ell_spmv_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
+                    interpret: bool = True) -> jax.Array:
+    """vals, cols: (T, R, W); x: (n_cols,) -> partials (T, R)."""
+    T, R, W = vals.shape
+    n_cols = x.shape[0]
+    return pl.pallas_call(
+        _ell_kernel,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((n_cols,), lambda t: (0,)),       # x: whole vector
+            pl.BlockSpec((1, R, W), lambda t: (t, 0, 0)),  # vals tile
+            pl.BlockSpec((1, R, W), lambda t: (t, 0, 0)),  # cols tile
+        ],
+        out_specs=pl.BlockSpec((1, R), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, R), vals.dtype),
+        interpret=interpret,
+    )(x, vals, cols)
+
+
+def _ell_direct_kernel(x_ref, vals_ref, cols_ref, y_ref):
+    """GRID_ACC variant: write the output rows of this tile directly.
+
+    Valid only when Model-Driven Compression proved the rowmap affine with
+    slope 1 (tile t owns rows [t*R, (t+1)*R)) — the kernel builder checks.
+    """
+    vals = vals_ref[0]
+    cols = cols_ref[0]
+    x = x_ref[...]
+    y_ref[...] = jnp.sum(vals * jnp.take(x, cols, axis=0), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ell_spmv_direct_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
+                           interpret: bool = True) -> jax.Array:
+    """Direct-write variant -> flat (T*R,) output slab (no scatter)."""
+    T, R, W = vals.shape
+    n_cols = x.shape[0]
+    return pl.pallas_call(
+        _ell_direct_kernel,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((n_cols,), lambda t: (0,)),
+            pl.BlockSpec((1, R, W), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, R, W), lambda t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((R,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((T * R,), vals.dtype),
+        interpret=interpret,
+    )(x, vals, cols)

@@ -1,0 +1,33 @@
+"""Jitted public wrappers for the Pallas SpMV kernels.
+
+The kernel builder (``core/kernel_builder.py`` with ``backend='pallas'``)
+calls these; tests sweep them against ``ref.py``. ``interpret=True`` runs
+the kernel bodies in Python on CPU (this container); on a real TPU pass
+``interpret=False`` to compile through Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from .ell_spmv import ell_spmv_pallas, ell_spmv_direct_pallas
+from .seg_spmv import seg_spmv_pallas
+from . import ref
+
+__all__ = ["ell_spmv", "ell_spmv_direct", "seg_spmv"]
+
+
+def ell_spmv(vals, cols, x, *, interpret: bool = True) -> jax.Array:
+    """(T, R, W) padded tiles -> (T, R) row partials."""
+    return ell_spmv_pallas(vals, cols, x, interpret=interpret)
+
+
+def ell_spmv_direct(vals, cols, x, *, interpret: bool = True) -> jax.Array:
+    """GRID_ACC variant -> flat (T*R,) contiguous output slab."""
+    return ell_spmv_direct_pallas(vals, cols, x, interpret=interpret)
+
+
+def seg_spmv(vals, cols, local_row, seg_end, x, seg_rows: int,
+             mode: str = "seg_scan", *, interpret: bool = True) -> jax.Array:
+    """(T, S, L) nnz-split tiles -> (T, seg_rows) segment partials."""
+    return seg_spmv_pallas(vals, cols, local_row, seg_end, x, seg_rows,
+                           mode=mode, interpret=interpret)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests sweep against
+(``tests/test_kernels.py``) and double as the CPU fast path used by the
+kernel builder's ``backend='jax'``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ell_spmv_ref", "ell_spmv_direct_ref", "seg_spmv_ref"]
+
+
+def ell_spmv_ref(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
+    """Row-per-lane padded-tile SpMV partials.
+
+    vals, cols: (T, R, W); x: (n_cols,) -> partials (T, R).
+    Padded entries must carry val=0 (their gathered x value is ignored).
+    """
+    return jnp.einsum("trw,trw->tr", vals, x[cols])
+
+
+def ell_spmv_direct_ref(vals, cols, x) -> jax.Array:
+    """GRID_ACC variant: tiles map to contiguous output rows; returns the
+    flat (T*R,) output slab written directly (no scatter)."""
+    return ell_spmv_ref(vals, cols, x).reshape(-1)
+
+
+def seg_spmv_ref(vals, cols, local_row, seg_end, x, seg_rows: int,
+                 mode: str = "seg_scan") -> jax.Array:
+    """NNZ-split tile SpMV partials.
+
+    vals/cols/local_row: (T, S, L); seg_end: (T, M) exclusive in-tile end
+    positions; returns per-tile row partials (T, M).
+
+    mode='onehot_mxu': products x one-hot(local_row) matmul (MXU path).
+    mode='seg_scan'  : in-tile cumulative sum gathered at segment ends
+                       (CSR5-style descriptor path).
+    Both are mathematically identical; tests assert they agree.
+    """
+    T = vals.shape[0]
+    prod = (vals * x[cols]).reshape(T, -1)
+    if mode == "onehot_mxu":
+        onehot = jax.nn.one_hot(local_row.reshape(T, -1), seg_rows,
+                                dtype=vals.dtype)
+        return jnp.einsum("tc,tcm->tm", prod, onehot)
+    cs = jnp.cumsum(prod, axis=1)
+    # g[t, m] = inclusive cumsum at the last element of segment m
+    end = seg_end.astype(jnp.int32)
+    g = jnp.where(end > 0,
+                  jnp.take_along_axis(cs, jnp.maximum(end - 1, 0), axis=1),
+                  0.0)
+    g_prev = jnp.concatenate([jnp.zeros((T, 1), g.dtype), g[:, :-1]], axis=1)
+    return g - g_prev

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: nnz-split segmented SpMV (merge-based / CSR5 family).
+
+Two in-tile reduction strategies (implementing-stage operators):
+
+* ``seg_scan``  (SEG_SCAN_RED) — in-tile cumulative sum over the flat
+  product stream, gathered at the precomputed CSR5-style segment
+  descriptor ``seg_end``. This is the TPU adaptation of warp-level
+  segmented scan: the warp-shuffle prefix sum becomes a whole-tile
+  vectorised cumsum (log-depth on VREGs), and the bitmap boundary handling
+  becomes a static descriptor array built by the format generator.
+
+* ``onehot_mxu`` (ONEHOT_MXU_RED) — products x one-hot(local_row) matmul.
+  No GPU counterpart: it deliberately routes the irregular reduction
+  through the otherwise-idle MXU (128x128 systolic array). For tiles of
+  C nnz and M row slots it costs C*M MACs but zero data-dependent control
+  flow — on TPU this usually beats the scan when M is small (the search
+  engine decides per matrix).
+
+Grid: one step per tile; partials (T, M) are scattered into y by the
+kernel builder (SCATTER_RED combine).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["seg_spmv_pallas"]
+
+
+def _seg_scan_kernel(x_ref, vals_ref, cols_ref, end_ref, out_ref):
+    vals = vals_ref[0].reshape(-1)          # (C,) flat nnz stream
+    cols = cols_ref[0].reshape(-1)
+    end = end_ref[0]                        # (M,) exclusive segment ends
+    x = x_ref[...]
+    prod = vals * jnp.take(x, cols, axis=0)
+    cs = jnp.cumsum(prod)                   # in-tile inclusive scan
+    g = jnp.where(end > 0, jnp.take(cs, jnp.maximum(end - 1, 0)), 0.0)
+    g_prev = jnp.concatenate([jnp.zeros((1,), g.dtype), g[:-1]])
+    out_ref[0, :] = g - g_prev
+
+
+def _onehot_kernel(x_ref, vals_ref, cols_ref, local_ref, out_ref):
+    vals = vals_ref[0].reshape(-1)          # (C,)
+    cols = cols_ref[0].reshape(-1)
+    local = local_ref[0].reshape(-1)        # (C,) row slot per nnz
+    x = x_ref[...]
+    prod = vals * jnp.take(x, cols, axis=0)
+    m = out_ref.shape[1]
+    # one-hot built from iota comparison -> (C, M); reduce on the MXU
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, m), 1)).astype(vals.dtype)
+    out_ref[0, :] = jax.lax.dot_general(
+        prod[None, :], onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("seg_rows", "mode", "interpret"))
+def seg_spmv_pallas(vals: jax.Array, cols: jax.Array, local_row: jax.Array,
+                    seg_end: jax.Array, x: jax.Array, seg_rows: int,
+                    mode: str = "seg_scan", interpret: bool = True
+                    ) -> jax.Array:
+    """vals/cols/local_row: (T, S, L); seg_end: (T, M) -> partials (T, M)."""
+    T, S, L = vals.shape
+    M = seg_rows
+    n_cols = x.shape[0]
+    x_spec = pl.BlockSpec((n_cols,), lambda t: (0,))
+    tile3 = pl.BlockSpec((1, S, L), lambda t: (t, 0, 0))
+    out_spec = pl.BlockSpec((1, M), lambda t: (t, 0))
+    out_shape = jax.ShapeDtypeStruct((T, M), vals.dtype)
+    if mode == "seg_scan":
+        return pl.pallas_call(
+            _seg_scan_kernel,
+            grid=(T,),
+            in_specs=[x_spec, tile3, tile3,
+                      pl.BlockSpec((1, M), lambda t: (t, 0))],
+            out_specs=out_spec, out_shape=out_shape, interpret=interpret,
+        )(x, vals, cols, seg_end)
+    elif mode == "onehot_mxu":
+        return pl.pallas_call(
+            _onehot_kernel,
+            grid=(T,),
+            in_specs=[x_spec, tile3, tile3, tile3],
+            out_specs=out_spec, out_shape=out_shape, interpret=interpret,
+        )(x, vals, cols, local_row)
+    raise ValueError(f"unknown mode {mode!r}")

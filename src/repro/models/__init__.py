@@ -1,0 +1,3 @@
+"""Assigned-architecture model zoo (pure-functional JAX)."""
+from .model import (init_params, forward, loss_fn, prefill, decode_step,  # noqa: F401
+                    cache_spec, pattern_specs, n_blocks, padded_vocab)

@@ -1,0 +1,234 @@
+"""Transformer building blocks: norms, RoPE, GQA attention (train + cached
+decode), gated/plain MLPs. Pure-functional JAX on parameter pytrees.
+
+Sharding note: projection weights keep *flattened* head dims
+(d_model, n_heads*head_dim) so tensor-parallel sharding divides evenly even
+when n_heads % tp != 0 (e.g. starcoder2's 36 heads on a 16-way model axis);
+GSPMD re-shards around the (B,S,H,hd) reshape (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+Array = jax.Array
+
+
+# ------------------------------- norms ------------------------------------
+
+def init_norm(cfg: ArchConfig, d: int) -> dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layer":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: dict, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # LayerNorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:            # RMSNorm
+        var = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(scale: Array, x: Array, eps: float = 1e-6) -> Array:
+    """qk-norm (qwen3): RMSNorm over the head_dim of (B,S,H,hd)."""
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# -------------------------------- RoPE -------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[:, :, None, :] if cos.ndim == 3 else cos[None, :, None, :]
+    sin = sin[:, :, None, :] if sin.ndim == 3 else sin[None, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------ attention ----------------------------------
+
+def init_attention(cfg: ArchConfig, key: Array) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "wq": jax.random.normal(kq, (d, cfg.n_heads * hd), jnp.float32) * s,
+        "wk": jax.random.normal(kk, (d, cfg.n_kv_heads * hd), jnp.float32) * s,
+        "wv": jax.random.normal(kv, (d, cfg.n_kv_heads * hd), jnp.float32) * s,
+        "wo": jax.random.normal(ko, (cfg.n_heads * hd, d), jnp.float32)
+              * (1.0 / np.sqrt(cfg.n_heads * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _split_heads(x: Array, n: int, hd: int) -> Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def _qkv(cfg: ArchConfig, p: dict, x: Array, positions: Array):
+    hd = cfg.hd
+    q = _split_heads(x @ p["wq"].astype(x.dtype), cfg.n_heads, hd)
+    k = _split_heads(x @ p["wk"].astype(x.dtype), cfg.n_kv_heads, hd)
+    v = _split_heads(x @ p["wv"].astype(x.dtype), cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    if cfg.rope_theta:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores_softmax_v(cfg: ArchConfig, q: Array, k: Array, v: Array,
+                          mask: Array) -> Array:
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd); mask: (B,1,S,T) additive."""
+    groups = cfg.n_heads // cfg.n_kv_heads
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    qg = q.reshape(b, s, cfg.n_kv_heads, groups, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k) / np.sqrt(hd)
+    scores = scores.astype(jnp.float32) + mask[:, :, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(b, s, h * hd)
+
+
+def causal_mask(s: int, dtype=jnp.float32, window: Optional[int] = None):
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    allow = j <= i
+    if window is not None:
+        allow &= (i - j) < window
+    return jnp.where(allow, 0.0, -1e30).astype(dtype)[None, None]
+
+
+def _gqa_blockwise(cfg: ArchConfig, q: Array, k: Array, v: Array,
+                   block_kv: int, window: Optional[int]) -> Array:
+    """Flash-style online-softmax attention: scan over KV chunks.
+
+    Peak memory per step is O(B*H*S*block_kv) instead of O(B*H*S*S) — the
+    §Perf memory-term optimization for the 32k prefill cells."""
+    b, s, h, hd = q.shape
+    groups = h // cfg.n_kv_heads
+    qg = q.reshape(b, s, cfg.n_kv_heads, groups, hd)
+    scale = 1.0 / np.sqrt(hd)
+    n_chunks = s // block_kv
+    kc = k.reshape(b, n_chunks, block_kv, cfg.n_kv_heads, hd)
+    vc = v.reshape(b, n_chunks, block_kv, cfg.n_kv_heads, hd)
+    qi = jnp.arange(s)[:, None]
+
+    def step(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        kv_pos = j * block_kv + jnp.arange(block_kv)[None, :]
+        allow = kv_pos <= qi
+        if window is not None:
+            allow &= (qi - kv_pos) < window
+        sc = jnp.einsum("bskgh,btkh->bkgst", qg, kj) * scale
+        sc = sc.astype(jnp.float32) + jnp.where(allow, 0.0, -1e30)
+        m_new = jnp.maximum(m, sc.max(-1))
+        alpha = jnp.exp(m - m_new)
+        pr = jnp.exp(sc - m_new[..., None])
+        l_new = l * alpha + pr.sum(-1)
+        acc_new = (acc * alpha[..., None].astype(acc.dtype)
+                   + jnp.einsum("bkgst,btkh->bkgsh", pr.astype(q.dtype), vj)
+                   ).astype(acc.dtype)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, cfg.n_kv_heads, groups, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, cfg.n_kv_heads, groups, s), jnp.float32)
+    a0 = jnp.zeros((b, cfg.n_kv_heads, groups, s, hd), q.dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.arange(n_chunks), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(q.dtype)
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, h * hd)
+
+
+def attention_train(cfg: ArchConfig, p: dict, x: Array, positions: Array,
+                    block_kv: Optional[int] = None) -> Array:
+    q, k, v = _qkv(cfg, p, x, positions)
+    if block_kv is not None and x.shape[1] % block_kv == 0 \
+            and x.shape[1] > block_kv:
+        out = _gqa_blockwise(cfg, q, k, v, block_kv, cfg.window)
+    else:
+        mask = causal_mask(x.shape[1], window=cfg.window)
+        mask = jnp.broadcast_to(mask, (x.shape[0],) + mask.shape[1:])
+        out = _gqa_scores_softmax_v(cfg, q, k, v, mask)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def attention_decode(cfg: ArchConfig, p: dict, x: Array, pos: Array,
+                     k_cache: Array, v_cache: Array):
+    """One-token decode. x: (B,1,D); pos: scalar int32 (current position);
+    caches: (B, S_c, KV, hd). With a sliding window the cache is a ring
+    buffer of size S_c == window. Returns (out, k_cache, v_cache)."""
+    b, _, _ = x.shape
+    s_c = k_cache.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(cfg, p, x, positions)
+    slot = pos % s_c if cfg.window else jnp.minimum(pos, s_c - 1)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0))
+    j = jnp.arange(s_c)
+    if cfg.window:
+        # ring buffer: entry j holds absolute position p_j with p_j % s_c == j
+        age = (slot - j) % s_c
+        valid = age <= jnp.minimum(pos, s_c - 1)
+    else:
+        valid = j <= pos
+    mask = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[None, None, None, :]
+    mask = jnp.broadcast_to(mask, (b, 1, 1, s_c))
+    out = _gqa_scores_softmax_v(cfg, q, k_cache.astype(x.dtype),
+                                v_cache.astype(x.dtype), mask)
+    return out @ p["wo"].astype(x.dtype), k_cache, v_cache
+
+
+# --------------------------------- MLP --------------------------------------
+
+def init_mlp(cfg: ArchConfig, key: Array) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    p = {"w_up": jax.random.normal(k1, (d, f), jnp.float32) * s_in,
+         "w_down": jax.random.normal(k2, (f, d), jnp.float32) * s_out}
+    if cfg.mlp_kind == "swiglu":
+        p["w_gate"] = jax.random.normal(k3, (d, f), jnp.float32) * s_in
+    return p
+
+
+def apply_mlp(cfg: ArchConfig, p: dict, x: Array) -> Array:
+    up = x @ p["w_up"].astype(x.dtype)
+    if cfg.mlp_kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ p["w_down"].astype(x.dtype)

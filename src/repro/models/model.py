@@ -1,0 +1,347 @@
+"""Model assembly: init / train forward / prefill / decode for every
+assigned architecture, from a single ``ArchConfig``-driven block machine.
+
+Layers are grouped into *pattern blocks* (one repetition of
+``cfg.pattern``, e.g. jamba's 8-layer Mamba/attention super-block) and
+scanned with ``lax.scan`` over stacked block parameters — HLO size is
+pattern-length-invariant, which keeps 126-layer dry-run compiles cheap.
+
+The per-position layer kind (attention vs mamba, MLP vs MoE) is static
+within the pattern (requires pattern_len % moe.every == 0 — true for all
+assigned archs), so the scan body is trace-time polymorphic but run-time
+monomorphic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ArchConfig
+from . import layers as L
+from . import moe as MOE
+from . import ssm as SSM
+
+Array = jax.Array
+
+VOCAB_PAD = 256  # pad embedding tables so vocab shards evenly (MaxText-style)
+
+
+def _wsc(x, spec):
+    """with_sharding_constraint under the ambient mesh (no-op spec=None).
+
+    GSPMD's while-loop sharding propagation can drop the batch sharding of
+    the scan carry (observed: full-shape (B,S,*) activation all-reduces in
+    the partitioned HLO, EXPERIMENTS.md §Perf iteration 1). Anchoring the
+    carry and the logits with explicit constraints is the standard
+    production fix (MaxText does the same at every layer boundary).
+    """
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    return int(np.ceil(cfg.vocab / VOCAB_PAD) * VOCAB_PAD)
+
+
+@dataclasses.dataclass(frozen=True)
+class PositionSpec:
+    kind: str            # 'A' | 'M'
+    ffn: Optional[str]   # 'mlp' | 'moe' | None
+
+
+def pattern_specs(cfg: ArchConfig) -> tuple[PositionSpec, ...]:
+    pattern = cfg.pattern or ("A",)
+    plen = len(pattern)
+    assert cfg.n_layers % plen == 0, (cfg.name, cfg.n_layers, plen)
+    specs = []
+    for p, kind in enumerate(pattern):
+        if cfg.d_ff == 0 and cfg.moe is None:
+            ffn = None                     # mamba2: mixer-only blocks
+        elif cfg.moe is not None:
+            every = cfg.moe.every
+            assert plen % every == 0 or every == 1
+            ffn = "moe" if (p % every == every - 1) else "mlp"
+        else:
+            ffn = "mlp"
+        specs.append(PositionSpec(kind, ffn))
+    return tuple(specs)
+
+
+def n_blocks(cfg: ArchConfig) -> int:
+    return cfg.n_layers // len(cfg.pattern or ("A",))
+
+
+# --------------------------------- init ------------------------------------
+
+def _init_position(cfg: ArchConfig, spec: PositionSpec, key: Array) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": L.init_norm(cfg, cfg.d_model)}
+    if spec.kind == "A":
+        p["attn"] = L.init_attention(cfg, k1)
+    else:
+        p["mamba"] = SSM.init_mamba(cfg, k2)
+    if spec.ffn is not None:
+        p["ln2"] = L.init_norm(cfg, cfg.d_model)
+        p["ffn"] = (MOE.init_moe(cfg, k3) if spec.ffn == "moe"
+                    else L.init_mlp(cfg, k4))
+    return p
+
+
+def init_params(cfg: ArchConfig, key: Array) -> dict:
+    specs = pattern_specs(cfg)
+    nb = n_blocks(cfg)
+    vp = padded_vocab(cfg)
+    k_embed, k_head, k_blocks = jax.random.split(key, 3)
+    params = {
+        "embed": jax.random.normal(k_embed, (vp, cfg.d_model), jnp.float32)
+                 * 0.02,
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            k_head, (cfg.d_model, vp), jnp.float32) / np.sqrt(cfg.d_model)
+    blocks = []
+    for p, spec in enumerate(specs):
+        keys = jax.random.split(jax.random.fold_in(k_blocks, p), nb)
+        stacked = jax.vmap(lambda k: _init_position(cfg, spec, k))(keys)
+        blocks.append(stacked)
+    params["blocks"] = blocks
+    return params
+
+
+# ------------------------------ forward ------------------------------------
+
+def _block_body(cfg: ArchConfig, specs, block_params: list[dict], h: Array,
+                positions: Array, block_kv=None):
+    """One pattern block (train path). Returns (h, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    for spec, p in zip(specs, block_params):
+        xn = L.apply_norm(p["ln1"], h)
+        if spec.kind == "A":
+            h = h + L.attention_train(cfg, p["attn"], xn, positions,
+                                      block_kv=block_kv)
+        else:
+            h = h + SSM.mamba_train(cfg, p["mamba"], xn)
+        if spec.ffn is not None:
+            xn = L.apply_norm(p["ln2"], h)
+            if spec.ffn == "moe":
+                y, a = MOE.apply_moe(cfg, p["ffn"], xn)
+                aux = aux + a
+            else:
+                y = L.apply_mlp(cfg, p["ffn"], xn)
+            h = h + y
+    return h, aux
+
+
+def _embed(cfg: ArchConfig, params: dict, tokens: Array,
+           prefix_embeds: Optional[Array], dtype) -> Array:
+    h = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    if cfg.n_prefix:
+        assert prefix_embeds is not None, f"{cfg.name} needs prefix embeds"
+        h = jnp.concatenate([prefix_embeds.astype(dtype), h], axis=1)
+    return h
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: Array,
+            prefix_embeds: Optional[Array] = None,
+            compute_dtype=jnp.bfloat16, remat: bool = True,
+            block_kv: Optional[int] = None, unroll: int = 1,
+            act_dp: Optional[tuple] = None, seq_shard: bool = False):
+    """tokens: (B, S) -> (logits (B, S, vocab_padded), aux_loss).
+
+    seq_shard=True = sequence parallelism: the residual stream's seq axis
+    is sharded over the model axis between layers, turning full-shape TP
+    activation all-reduces into reduce-scatter/all-gather pairs
+    (EXPERIMENTS.md §Perf iteration 4; Megatron-SP analogue).
+
+    Logits cover token positions only (the stubbed modality prefix is
+    consumed but not predicted)."""
+    specs = pattern_specs(cfg)
+    h = _embed(cfg, params, tokens, prefix_embeds, compute_dtype)
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)[None]
+
+    hidden_spec = ((act_dp, "model" if seq_shard else None, None)
+                   if act_dp is not None else None)
+
+    def body(carry, block_params):
+        h, aux = carry
+        h = _wsc(h, hidden_spec)
+        h, a = _block_body(cfg, specs, block_params, h, positions, block_kv)
+        h = _wsc(h, hidden_spec)
+        return (h, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                               params["blocks"], unroll=unroll)
+    h = L.apply_norm(params["final_norm"], h)
+    if cfg.n_prefix:
+        h = h[:, cfg.n_prefix:]
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = h @ head.astype(h.dtype)
+    if act_dp is not None:
+        logits = _wsc(logits, (act_dp, None, "model"))
+    return logits, aux
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict,
+            compute_dtype=jnp.bfloat16, remat: bool = True,
+            block_kv: Optional[int] = None, unroll: int = 1,
+            act_dp: Optional[tuple] = None, seq_shard: bool = False):
+    """Next-token cross entropy + MoE aux + z-loss. batch: tokens, labels
+    (+ prefix_embeds for vlm/audio). labels < 0 are masked."""
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          batch.get("prefix_embeds"), compute_dtype, remat,
+                          block_kv, unroll, act_dp, seq_shard)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0) & (labels < cfg.vocab)
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    ce = nll.sum() / denom
+    z_loss = 1e-4 * ((lse * mask) ** 2).sum() / denom
+    total = ce + z_loss + 1e-2 * aux
+    return total, {"ce": ce, "aux": aux, "z": z_loss}
+
+
+# --------------------------- prefill / decode -------------------------------
+
+def cache_spec(cfg: ArchConfig, batch: int, s_cache: int,
+               dtype=jnp.bfloat16) -> list[dict]:
+    """Zero-initialised cache pytree (one entry per pattern position)."""
+    specs = pattern_specs(cfg)
+    nb = n_blocks(cfg)
+    caches = []
+    for spec in specs:
+        if spec.kind == "A":
+            sc = min(s_cache, cfg.window) if cfg.window else s_cache
+            shape = (nb, batch, sc, cfg.n_kv_heads, cfg.hd)
+            caches.append({"k": jnp.zeros(shape, dtype),
+                           "v": jnp.zeros(shape, dtype)})
+        else:
+            d_in, H, P, N, ch = SSM._dims(cfg)
+            w = cfg.ssm.conv_width
+            caches.append({
+                "conv": jnp.zeros((nb, batch, w - 1, ch), dtype),
+                "ssm": jnp.zeros((nb, batch, H, P, N), dtype),
+            })
+    return caches
+
+
+def decode_step(cfg: ArchConfig, params: dict, token: Array, pos: Array,
+                caches: list[dict], compute_dtype=jnp.bfloat16,
+                act_dp: Optional[tuple] = None):
+    """One-token decode. token: (B, 1); pos: scalar current position
+    (prefix-inclusive); caches as from cache_spec. Returns (logits, caches).
+    """
+    specs = pattern_specs(cfg)
+    h = jnp.take(params["embed"], token, axis=0).astype(compute_dtype)
+
+    hidden_spec = (act_dp, None, None) if act_dp is not None else None
+
+    def body(h, xs):
+        block_params, cache_in = xs
+        h = _wsc(h, hidden_spec)
+        cache_out = []
+        for i, (spec, p) in enumerate(zip(specs, block_params)):
+            c = cache_in[i]
+            xn = L.apply_norm(p["ln1"], h)
+            if spec.kind == "A":
+                out, kc, vc = L.attention_decode(cfg, p["attn"], xn, pos,
+                                                 c["k"], c["v"])
+                cache_out.append({"k": kc, "v": vc})
+            else:
+                out, conv, ssm_st = SSM.mamba_decode(cfg, p["mamba"], xn,
+                                                     c["conv"], c["ssm"])
+                cache_out.append({"conv": conv.astype(c["conv"].dtype),
+                                  "ssm": ssm_st.astype(c["ssm"].dtype)})
+            h = h + out
+            if spec.ffn is not None:
+                xn = L.apply_norm(p["ln2"], h)
+                if spec.ffn == "moe":
+                    y, _ = MOE.apply_moe(cfg, p["ffn"], xn)
+                else:
+                    y = L.apply_mlp(cfg, p["ffn"], xn)
+                h = h + y
+        return h, cache_out
+
+    h, new_caches = jax.lax.scan(body, h, (params["blocks"], caches))
+    h = L.apply_norm(params["final_norm"], h)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (h @ head.astype(h.dtype)).astype(jnp.float32)
+    return logits, new_caches
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: Array,
+            prefix_embeds: Optional[Array] = None,
+            compute_dtype=jnp.bfloat16, block_kv: Optional[int] = None,
+            act_dp: Optional[tuple] = None):
+    """Full-sequence prefill producing logits + populated caches.
+
+    Attention caches hold the processed sequence (window-truncated when
+    sliding-window); mamba positions hold final conv/ssm states."""
+    specs = pattern_specs(cfg)
+    h = _embed(cfg, params, tokens, prefix_embeds, compute_dtype)
+    s_total = h.shape[1]
+    positions = jnp.arange(s_total, dtype=jnp.int32)[None]
+
+    hidden_spec = (act_dp, None, None) if act_dp is not None else None
+
+    def body(h, block_params):
+        h = _wsc(h, hidden_spec)
+        cache_out = []
+        for spec, p in zip(specs, block_params):
+            xn = L.apply_norm(p["ln1"], h)
+            if spec.kind == "A":
+                q, k, v = L._qkv(cfg, p["attn"], xn, positions)
+                if block_kv is not None and s_total % block_kv == 0 \
+                        and s_total > block_kv:
+                    out = L._gqa_blockwise(cfg, q, k, v, block_kv, cfg.window)
+                else:
+                    mask = L.causal_mask(s_total, window=cfg.window)
+                    mask = jnp.broadcast_to(mask,
+                                            (h.shape[0],) + mask.shape[1:])
+                    out = L._gqa_scores_softmax_v(cfg, q, k, v, mask)
+                h = h + out @ p["attn"]["wo"].astype(h.dtype)
+                if cfg.window and s_total > cfg.window:
+                    # ring-buffer layout: slot j holds position p, p%W == j
+                    w = cfg.window
+                    start = s_total - w
+                    rolled_k = jnp.roll(k[:, start:], shift=start % w, axis=1)
+                    rolled_v = jnp.roll(v[:, start:], shift=start % w, axis=1)
+                    cache_out.append({"k": rolled_k.astype(compute_dtype),
+                                      "v": rolled_v.astype(compute_dtype)})
+                else:
+                    cache_out.append({"k": k.astype(compute_dtype),
+                                      "v": v.astype(compute_dtype)})
+            else:
+                out, (conv, ssm_st) = SSM.mamba_train(cfg, p["mamba"], xn,
+                                                      return_state=True)
+                h = h + out
+                cache_out.append({"conv": conv.astype(compute_dtype),
+                                  "ssm": ssm_st.astype(compute_dtype)})
+            if spec.ffn is not None:
+                xn = L.apply_norm(p["ln2"], h)
+                if spec.ffn == "moe":
+                    y, _ = MOE.apply_moe(cfg, p["ffn"], xn)
+                else:
+                    y = L.apply_mlp(cfg, p["ffn"], xn)
+                h = h + y
+        return h, cache_out
+
+    h, caches = jax.lax.scan(body, h, params["blocks"])
+    h = L.apply_norm(params["final_norm"], h)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (h[:, -1:] @ head.astype(h.dtype)).astype(jnp.float32)
+    return logits, caches

@@ -1,0 +1,191 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation inside chunks of length Q, linear state passing between chunks
+(``lax.scan``). Decode is the O(1) recurrence on a (B, H, P, N) state plus
+a depthwise-conv ring state — this is what makes ``long_500k`` runnable
+for the ssm/hybrid architectures (DESIGN.md §5).
+
+Shapes: d_in = expand*d_model, H = d_in/head_dim heads, P = head_dim,
+N = d_state, G = 1 (single B/C group).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+Array = jax.Array
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.d_state          # x, B, C pass through the conv
+    return d_in, n_heads, s.head_dim, s.d_state, conv_ch
+
+
+def init_mamba(cfg: ArchConfig, key: Array) -> dict:
+    d = cfg.d_model
+    d_in, H, P, N, conv_ch = _dims(cfg)
+    s = cfg.ssm
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * N + H          # z, xBC, dt
+    return {
+        "in_proj": jax.random.normal(k1, (d, proj_out), jnp.float32)
+                   / np.sqrt(d),
+        "conv_w": jax.random.normal(k2, (conv_ch, s.conv_width), jnp.float32)
+                  / np.sqrt(s.conv_width),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(0.001, 0.1, H,
+                                                  dtype=jnp.float32))),
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": jnp.ones((d_in,), jnp.float32),
+        "out_proj": jax.random.normal(k4, (d_in, d), jnp.float32)
+                    / np.sqrt(d_in),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: Array):
+    d_in, H, P, N, _ = _dims(cfg)
+    z, xc, b, c, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, xc, b, c, dt
+
+
+def _conv_train(p: dict, xbc: Array) -> Array:
+    """Causal depthwise conv over (B, S, conv_ch)."""
+    w = p["conv_w"].astype(xbc.dtype)        # (ch, W)
+    width = w.shape[1]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1], :] * w[:, i] for i in range(width))
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def _segsum_decay(dA: Array) -> Array:
+    """dA: (B, C, Q, H) -> lower-tri decay L: (B, C, H, Q, Q)."""
+    css = jnp.cumsum(dA, axis=2)                       # inclusive
+    diff = css[:, :, :, None, :] - css[:, :, None, :, :]   # (B,C,Q,Q,H)? no:
+    # build (B,C,H,Q,Q): transpose so heads lead the Q,Q block
+    cssh = jnp.moveaxis(css, -1, 2)                    # (B,C,H,Q)
+    diff = cssh[..., :, None] - cssh[..., None, :]     # (B,C,H,Q,Q) l,s
+    tri = jnp.tril(jnp.ones(diff.shape[-2:], bool))
+    return jnp.where(tri, jnp.exp(diff), 0.0), css
+
+
+def ssd_chunked(xdt: Array, dA: Array, B_: Array, C_: Array, chunk: int,
+                init_state: Array | None = None):
+    """Chunked SSD scan.
+
+    xdt: (B,S,H,P) input*dt; dA: (B,S,H); B_,C_: (B,S,N) (G=1).
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    b, s, h, pdim = xdt.shape
+    n = B_.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+    xdt = xdt.reshape(b, nc, q, h, pdim)
+    dA = dA.reshape(b, nc, q, h)
+    Bc = B_.reshape(b, nc, q, n)
+    Cc = C_.reshape(b, nc, q, n)
+
+    L, css = _segsum_decay(dA)                          # L:(B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp", Cc, Bc,
+                        L.astype(xdt.dtype), xdt)
+
+    chunk_last = css[:, :, -1, :]                       # (B,nc,H)
+    decay_states = jnp.exp(chunk_last[:, :, None, :] - css)  # (B,nc,Q,H)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc,
+                        decay_states.astype(xdt.dtype), xdt)
+
+    def step(carry, inp):
+        st, dec = inp                                   # (B,H,P,N), (B,H)
+        prev = carry
+        new = prev * jnp.exp(dec.astype(jnp.float32))[..., None, None].astype(
+            prev.dtype) + st
+        return new, prev
+
+    init = (jnp.zeros((b, h, pdim, n), xdt.dtype) if init_state is None
+            else init_state.astype(xdt.dtype))
+    final_state, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_last, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (B,nc,H,P,N)
+
+    in_decay = jnp.exp(css)                             # (B,nc,Q,H)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states,
+                       in_decay.astype(xdt.dtype))
+    y = (y_diag + y_off).reshape(b, s, h, pdim)
+    return y, final_state
+
+
+def mamba_train(cfg: ArchConfig, p: dict, x: Array,
+                return_state: bool = False):
+    """x: (B,S,d) -> (B,S,d). Set return_state for prefill (conv+ssm states)."""
+    d_in, H, P, N, conv_ch = _dims(cfg)
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = (proj[..., :d_in], proj[..., d_in:d_in + conv_ch],
+                      proj[..., d_in + conv_ch:])
+    xbc_conv = _conv_train(p, xbc)
+    xs = xbc_conv[..., :d_in]
+    B_ = xbc_conv[..., d_in:d_in + N]
+    C_ = xbc_conv[..., d_in + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])                # (B,S,H)
+    A = -jnp.exp(p["A_log"])                            # (H,)
+    xh = xs.reshape(*xs.shape[:2], H, P)
+    xdt = xh * dt[..., None].astype(x.dtype)
+    dA = dt * A                                         # (B,S,H) fp32
+    y, state = ssd_chunked(xdt, dA.astype(jnp.float32), B_, C_,
+                           cfg.ssm.chunk)
+    y = y + p["D"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(*x.shape[:2], d_in)
+    # gated RMSNorm (mamba2's norm-before-out-proj)
+    g = y * jax.nn.silu(z)
+    var = (g.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * p["gate_norm"]).astype(x.dtype)
+    out = g @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        width = p["conv_w"].shape[1]
+        conv_state = xbc[:, -(width - 1):, :]           # (B, W-1, ch)
+        return out, (conv_state, state)
+    return out
+
+
+def mamba_decode(cfg: ArchConfig, p: dict, x: Array, conv_state: Array,
+                 ssm_state: Array):
+    """One-token decode. x: (B,1,d); conv_state: (B, W-1, ch);
+    ssm_state: (B,H,P,N). Returns (out, conv_state, ssm_state)."""
+    d_in, H, P, N, conv_ch = _dims(cfg)
+    proj = (x[:, 0] @ p["in_proj"].astype(x.dtype))     # (B, proj_out)
+    z, xbc, dt_raw = (proj[..., :d_in], proj[..., d_in:d_in + conv_ch],
+                      proj[..., d_in + conv_ch:])
+    w = p["conv_w"].astype(x.dtype)                     # (ch, W)
+    width = w.shape[1]
+    full = jnp.concatenate([conv_state.astype(x.dtype), xbc[:, None]], 1)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,cw->bc", full, w)
+                           + p["conv_b"].astype(x.dtype))
+    new_conv_state = full[:, 1:]
+    xs, B_, C_ = (conv_out[..., :d_in], conv_out[..., d_in:d_in + N],
+                  conv_out[..., d_in + N:])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                # (B,H)
+    xh = xs.reshape(-1, H, P)
+    xdt = xh * dt[..., None].astype(x.dtype)
+    new_state = (ssm_state * dA[..., None, None].astype(ssm_state.dtype)
+                 + xdt[..., None] * B_[:, None, None, :].astype(ssm_state.dtype))
+    y = jnp.einsum("bhpn,bn->bhp", new_state.astype(x.dtype), C_)
+    y = y + p["D"].astype(x.dtype)[None, :, None] * xh
+    y = y.reshape(-1, d_in)
+    g = y * jax.nn.silu(z)
+    var = (g.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * p["gate_norm"]).astype(x.dtype)
+    out = (g @ p["out_proj"].astype(x.dtype))[:, None]
+    return out, new_conv_state, new_state

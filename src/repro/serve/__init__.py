@@ -1,0 +1,2 @@
+from .engine import ServeConfig, ServingEngine  # noqa: F401
+from .sparse_linear import SparseLinear, sparsify_linear  # noqa: F401

@@ -1,0 +1,135 @@
+"""Batched serving engine: continuous-batching prefill + decode loop.
+
+Serves a (reduced or full) model with a fixed decode batch: incoming
+requests are prefix-filled into free cache slots, then all active slots
+decode in lock-step (the standard TPU serving shape — decode is a single
+jitted step over the whole batch). Slot bookkeeping is host-side; all
+device work is two jitted functions (prefill_one, decode_all).
+
+This is the ``serve_step`` the decode_32k / long_500k dry-run cells lower;
+here it runs for real at reduced scale (examples/serve_requests.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import cache_spec, decode_step, init_params, prefill
+
+__all__ = ["ServeConfig", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 4
+    max_seq: int = 256
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 = greedy
+    seed: int = 0
+    compute_dtype: str = "float32"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, sc: ServeConfig,
+                 params: Optional[dict] = None):
+        self.cfg = cfg
+        self.sc = sc
+        dtype = jnp.float32 if sc.compute_dtype == "float32" else jnp.bfloat16
+        self.dtype = dtype
+        self.params = params if params is not None else init_params(
+            cfg, jax.random.PRNGKey(sc.seed))
+        # batched caches: one slot per concurrent request
+        self.caches = cache_spec(cfg, sc.max_batch, sc.max_seq, dtype=dtype)
+        self.positions = np.zeros(sc.max_batch, np.int32)
+        self.free = list(range(sc.max_batch))
+        self.active: dict[int, Request] = {}
+
+        cfg_ = cfg
+
+        def _decode(params, token, pos, caches):
+            return decode_step(cfg_, params, token, pos, caches,
+                               compute_dtype=dtype)
+
+        self._decode = jax.jit(_decode, donate_argnums=(3,))
+
+    # ------------------------------------------------------------------
+    def _prefill_slot(self, slot: int, prompt: np.ndarray):
+        """Sequential prefill into one slot via the decode path (slot-level
+        caches are slices of the batch caches; fine at example scale)."""
+        for t in prompt:
+            tok = np.zeros((self.sc.max_batch, 1), np.int32)
+            tok[slot, 0] = t
+            logits, self.caches = self._decode(
+                self.params, jnp.asarray(tok),
+                jnp.int32(self.positions[slot]), self.caches)
+            self.positions[slot] += 1
+        return logits
+
+    def submit(self, req: Request) -> bool:
+        if not self.free:
+            return False
+        slot = self.free.pop()
+        self.positions[slot] = 0
+        req._slot = slot
+        self.active[slot] = req
+        self._prefill_slot(slot, req.prompt)
+        return True
+
+    def step(self) -> None:
+        """One lock-step decode over all active slots."""
+        if not self.active:
+            return
+        tok = np.zeros((self.sc.max_batch, 1), np.int32)
+        for slot, req in self.active.items():
+            prev = (req.out_tokens[-1] if req.out_tokens
+                    else int(req.prompt[-1]))
+            tok[slot, 0] = prev
+        pos = int(max(self.positions[s] for s in self.active))
+        logits, self.caches = self._decode(self.params, jnp.asarray(tok),
+                                           jnp.int32(pos), self.caches)
+        logits = np.asarray(logits)
+        done_slots = []
+        for slot, req in self.active.items():
+            nxt = int(np.argmax(logits[slot, 0, : self.cfg.vocab]))
+            req.out_tokens.append(nxt)
+            self.positions[slot] += 1
+            if (len(req.out_tokens) >= self.sc.max_new_tokens
+                    or self.positions[slot] >= self.sc.max_seq - 1):
+                req.done = True
+                done_slots.append(slot)
+        for slot in done_slots:
+            del self.active[slot]
+            self.free.append(slot)
+
+    def run(self, requests: list[Request]) -> dict:
+        t0 = time.perf_counter()
+        pending = list(requests)
+        done = []
+        steps = 0
+        while pending or self.active:
+            while pending and self.free:
+                self.submit(pending.pop(0))
+            self.step()
+            steps += 1
+            done = [r for r in requests if r.done]
+            if steps > 10_000:
+                raise RuntimeError("serving did not terminate")
+        wall = time.perf_counter() - t0
+        total_tokens = sum(len(r.out_tokens) for r in requests)
+        return {"requests": len(requests), "tokens": total_tokens,
+                "wall_s": wall, "tok_per_s": total_tokens / max(wall, 1e-9),
+                "decode_steps": steps}

@@ -1,0 +1,83 @@
+"""SparseLinear: AlphaSparse-generated SpMV as a serving-time layer.
+
+This is the paper's technique as a *first-class framework feature*
+(DESIGN.md §4): a magnitude-pruned linear layer's decode-time matvec
+``y = W_sparse @ x`` is exactly SpMV. ``sparsify_linear`` prunes a dense
+weight, runs the AlphaSparse search offline (the paper's "extremely
+optimized library generator" usage, §III), and returns a layer whose
+forward pass calls the machine-designed program.
+
+For batched decode (B small), the program is vmapped over the batch —
+each column of the activation batch is one SpMV x-vector.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AlphaSparseSearch, SearchConfig, SparseMatrix,
+                        build_spmv, run_graph, search)
+from repro.core.graph import OperatorGraph
+from repro.core.operators import OpSpec
+
+__all__ = ["SparseLinear", "sparsify_linear", "prune_magnitude"]
+
+
+def prune_magnitude(w: np.ndarray, density: float) -> SparseMatrix:
+    """Keep the top-|density| fraction of |w| entries as a SparseMatrix."""
+    flat = np.abs(w).ravel()
+    k = max(1, int(flat.size * density))
+    thresh = np.partition(flat, -k)[-k]
+    rows, cols = np.nonzero(np.abs(w) >= thresh)
+    return SparseMatrix(w.shape[0], w.shape[1], rows.astype(np.int32),
+                        cols.astype(np.int32),
+                        w[rows, cols].astype(np.float32)).canonical()
+
+
+@dataclasses.dataclass
+class SparseLinear:
+    """y = A @ x with A in an AlphaSparse machine-designed format."""
+
+    matrix: SparseMatrix
+    graph: OperatorGraph
+    program: object            # SpmvProgram
+    search_gflops: Optional[float] = None
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """x: (n_cols,) or (B, n_cols) -> (n_rows,) or (B, n_rows)."""
+        if x.ndim == 1:
+            return self.program(x)
+        return jax.vmap(lambda xi: self.program(xi))(x)
+
+    @property
+    def density(self) -> float:
+        return self.matrix.nnz / (self.matrix.n_rows * self.matrix.n_cols)
+
+
+_DEFAULT_GRAPH = OperatorGraph.chain(
+    OpSpec.make("COMPRESS"),
+    OpSpec.make("TILE_ROW_BLOCK", rows=8),
+    OpSpec.make("SORT_TILE", window=8),
+    OpSpec.make("LANE_ROW_BLOCK"),
+    OpSpec.make("LANE_TOTAL_RED", combine="scatter"))
+
+
+def sparsify_linear(w: np.ndarray, density: float = 0.1,
+                    search_config: Optional[SearchConfig] = None,
+                    do_search: bool = True) -> SparseLinear:
+    """Prune a dense weight and generate its SpMV program.
+
+    do_search=False skips the (minutes-long) AlphaSparse search and uses a
+    sensible default graph — handy in tests; production path searches."""
+    m = prune_magnitude(np.asarray(w), density)
+    if do_search:
+        res = search(m, search_config or SearchConfig(max_seconds=30,
+                                                      max_structures=8))
+        return SparseLinear(m, res.best_graph, res.best_program,
+                            res.gflops)
+    meta = run_graph(m, _DEFAULT_GRAPH)
+    return SparseLinear(m, _DEFAULT_GRAPH, build_spmv(meta))

@@ -1,0 +1,306 @@
+"""Human-designed ("artificial") sparse formats — the paper's baselines.
+
+Each entry mirrors one of the formats the paper compares against
+(§VII-B/VII-C), re-implemented in JAX as an independent (format-build,
+kernel) pair. These are *not* built through the Operator Graph machinery —
+they are the hand-written competitors, so the comparison in
+``benchmarks/fig9_formats.py`` is meaningful.
+
+On-CPU note: these run as jitted XLA programs; on a real TPU the same
+builders feed the Pallas kernels. Relative ordering across formats is the
+quantity of interest (DESIGN.md §2, "measured runs").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.matrices import SparseMatrix
+
+__all__ = ["BaselineFormat", "BASELINES", "build_baseline"]
+
+
+@dataclasses.dataclass
+class BaselineFormat:
+    name: str
+    fmt: dict                      # name -> jnp array
+    fn: Callable                   # fn(fmt, x) -> y (jitted)
+    stored_bytes: int
+    padded_nnz: int
+
+    def __call__(self, x):
+        return self.fn(self.fmt, x)
+
+
+def _bytes(fmt: dict) -> int:
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in fmt.values())
+
+
+def _csr_arrays(m: SparseMatrix):
+    lengths = m.row_lengths()
+    row_ptr = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int64)
+    return row_ptr, lengths
+
+
+# ----------------------------------- CSR ----------------------------------
+
+def build_csr(m: SparseMatrix) -> BaselineFormat:
+    """cuSPARSE-CSR analogue: row-wise segmented reduction."""
+    fmt = {"vals": jnp.asarray(m.vals), "cols": jnp.asarray(m.cols),
+           "rows": jnp.asarray(m.rows)}
+    n_rows = m.n_rows
+
+    def fn(fmt, x):
+        prod = fmt["vals"] * x[fmt["cols"]]
+        return jax.ops.segment_sum(prod, fmt["rows"], num_segments=n_rows)
+
+    return BaselineFormat("CSR", fmt, jax.jit(fn), _bytes(fmt), m.nnz)
+
+
+# ----------------------------------- COO ----------------------------------
+
+def build_coo(m: SparseMatrix) -> BaselineFormat:
+    """cuSPARSE-COO analogue (atomic scatter -> scatter-add)."""
+    fmt = {"vals": jnp.asarray(m.vals), "cols": jnp.asarray(m.cols),
+           "rows": jnp.asarray(m.rows)}
+    n_rows = m.n_rows
+
+    def fn(fmt, x):
+        prod = fmt["vals"] * x[fmt["cols"]]
+        return jnp.zeros(n_rows, prod.dtype).at[fmt["rows"]].add(prod)
+
+    return BaselineFormat("COO", fmt, jax.jit(fn), _bytes(fmt), m.nnz)
+
+
+# ----------------------------------- ELL ----------------------------------
+
+def _ell_arrays(rows, cols, vals, n_rows, width):
+    lengths = np.bincount(rows, minlength=n_rows)
+    row_ptr = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int64)
+    pos = np.arange(rows.size, dtype=np.int64) - row_ptr[rows]
+    keep = pos < width
+    ev = np.zeros((n_rows, width), np.float32)
+    ec = np.zeros((n_rows, width), np.int32)
+    ev[rows[keep], pos[keep]] = vals[keep]
+    ec[rows[keep], pos[keep]] = cols[keep]
+    overflow = ~keep
+    return ev, ec, overflow
+
+
+def build_ell(m: SparseMatrix) -> BaselineFormat:
+    width = int(m.row_lengths().max()) if m.nnz else 1
+    ev, ec, _ = _ell_arrays(m.rows, m.cols, m.vals, m.n_rows, width)
+    fmt = {"vals": jnp.asarray(ev), "cols": jnp.asarray(ec)}
+
+    def fn(fmt, x):
+        return jnp.einsum("rw,rw->r", fmt["vals"], x[fmt["cols"]])
+
+    return BaselineFormat("ELL", fmt, jax.jit(fn), _bytes(fmt),
+                          m.n_rows * width)
+
+
+# ---------------------------------- SELL ----------------------------------
+
+def build_sell(m: SparseMatrix, c: int = 8, sigma_slices: int = 16) -> BaselineFormat:
+    """SELL-C-sigma [36,39]: sort within sigma windows, slice into C-row
+    chunks with per-slice width, bucket slices by width."""
+    lengths = m.row_lengths()
+    perm = np.arange(m.n_rows, dtype=np.int64)
+    span = c * sigma_slices
+    for lo in range(0, m.n_rows, span):
+        hi = min(lo + span, m.n_rows)
+        perm[lo:hi] = lo + np.argsort(-lengths[lo:hi], kind="stable")
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(m.n_rows)
+    rows = inv[m.rows]
+    order = np.lexsort((m.cols, rows))
+    rows, cols, vals = rows[order], m.cols[order], m.vals[order]
+
+    n_slices = math.ceil(m.n_rows / c)
+    lens_p = np.zeros(n_slices * c, np.int64)
+    lens_p[: m.n_rows] = np.bincount(rows, minlength=m.n_rows)
+    widths = np.maximum(lens_p.reshape(n_slices, c).max(1), 1)
+
+    row_ptr = np.concatenate([[0], np.cumsum(lens_p[: m.n_rows])]).astype(np.int64)
+    pos = np.arange(rows.size, dtype=np.int64) - row_ptr[rows]
+    fmt = {}
+    buckets = []
+    padded = 0
+    for w in np.unique(widths):
+        sl = np.where(widths == w)[0]
+        rank = np.full(n_slices, -1, np.int64)
+        rank[sl] = np.arange(sl.size)
+        ev = np.zeros((sl.size, c, int(w)), np.float32)
+        ec = np.zeros((sl.size, c, int(w)), np.int32)
+        rmap = np.full((sl.size, c), -1, np.int32)
+        nz_slice = rank[rows // c]
+        selm = nz_slice >= 0
+        ev[nz_slice[selm], rows[selm] % c, pos[selm]] = vals[selm]
+        ec[nz_slice[selm], rows[selm] % c, pos[selm]] = cols[selm]
+        rr = np.arange(m.n_rows)
+        rsel = rank[rr // c] >= 0
+        rmap[rank[rr[rsel] // c], rr[rsel] % c] = perm[rr[rsel]]
+        fmt[f"v{w}"], fmt[f"c{w}"], fmt[f"r{w}"] = (
+            jnp.asarray(ev), jnp.asarray(ec), jnp.asarray(rmap))
+        buckets.append(int(w))
+        padded += ev.size
+    n_rows = m.n_rows
+
+    def fn(fmt, x):
+        y = jnp.zeros(n_rows + 1, jnp.float32)
+        for w in buckets:
+            part = jnp.einsum("scw,scw->sc", fmt[f"v{w}"], x[fmt[f"c{w}"]])
+            rm = fmt[f"r{w}"].reshape(-1)
+            safe = jnp.where(rm >= 0, rm, n_rows)
+            y = y.at[safe].add(part.reshape(-1))
+        return y[:n_rows]
+
+    return BaselineFormat("SELL", fmt, jax.jit(fn), _bytes(fmt), padded)
+
+
+# ----------------------------------- HYB ----------------------------------
+
+def build_hyb(m: SparseMatrix) -> BaselineFormat:
+    """HYB [51,62]: ELL of typical width + COO overflow."""
+    lengths = m.row_lengths()
+    width = max(1, int(np.percentile(lengths, 75)))
+    ev, ec, overflow = _ell_arrays(m.rows, m.cols, m.vals, m.n_rows, width)
+    fmt = {"vals": jnp.asarray(ev), "cols": jnp.asarray(ec),
+           "orows": jnp.asarray(m.rows[overflow]),
+           "ocols": jnp.asarray(m.cols[overflow]),
+           "ovals": jnp.asarray(m.vals[overflow])}
+    n_rows = m.n_rows
+
+    def fn(fmt, x):
+        y = jnp.einsum("rw,rw->r", fmt["vals"], x[fmt["cols"]])
+        prod = fmt["ovals"] * x[fmt["ocols"]]
+        return y.at[fmt["orows"]].add(prod)
+
+    return BaselineFormat("HYB", fmt, jax.jit(fn), _bytes(fmt),
+                          m.n_rows * width + int(overflow.sum()))
+
+
+# ------------------------------- Merge-CSR --------------------------------
+
+def build_merge(m: SparseMatrix, chunk: int = 1024) -> BaselineFormat:
+    """Merge-based CSR [27]: perfectly nnz-balanced chunks + segment fixup."""
+    pad = math.ceil(max(m.nnz, 1) / chunk) * chunk
+    vals = np.zeros(pad, np.float32)
+    cols = np.zeros(pad, np.int32)
+    rows = np.zeros(pad, np.int32)
+    vals[: m.nnz], cols[: m.nnz], rows[: m.nnz] = m.vals, m.cols, m.rows
+    if m.nnz:
+        rows[m.nnz:] = m.rows[-1]
+    fmt = {"vals": jnp.asarray(vals), "cols": jnp.asarray(cols),
+           "rows": jnp.asarray(rows)}
+    n_rows = m.n_rows
+
+    def fn(fmt, x):
+        prod = fmt["vals"] * x[fmt["cols"]]
+        return jax.ops.segment_sum(prod, fmt["rows"], num_segments=n_rows)
+
+    return BaselineFormat("Merge", fmt, jax.jit(fn), _bytes(fmt), pad)
+
+
+# ---------------------------------- ACSR ----------------------------------
+
+def build_acsr(m: SparseMatrix) -> BaselineFormat:
+    """ACSR [24]: bin rows by power-of-two length; one ELL group per bin."""
+    lengths = m.row_lengths()
+    logs = np.ceil(np.log2(np.maximum(lengths, 1))).astype(np.int64)
+    fmt = {}
+    groups = []
+    padded = 0
+    row_ptr = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int64)
+    pos = np.arange(m.nnz, dtype=np.int64) - row_ptr[m.rows]
+    for lv in np.unique(logs):
+        sel = np.where(logs == lv)[0]
+        w = max(1, int(lengths[sel].max()))
+        rank = np.full(m.n_rows, -1, np.int64)
+        rank[sel] = np.arange(sel.size)
+        mask = rank[m.rows] >= 0
+        ev = np.zeros((sel.size, w), np.float32)
+        ec = np.zeros((sel.size, w), np.int32)
+        ev[rank[m.rows[mask]], pos[mask]] = m.vals[mask]
+        ec[rank[m.rows[mask]], pos[mask]] = m.cols[mask]
+        fmt[f"v{lv}"], fmt[f"c{lv}"] = jnp.asarray(ev), jnp.asarray(ec)
+        fmt[f"r{lv}"] = jnp.asarray(sel.astype(np.int32))
+        groups.append(int(lv))
+        padded += ev.size
+    n_rows = m.n_rows
+
+    def fn(fmt, x):
+        y = jnp.zeros(n_rows, jnp.float32)
+        for lv in groups:
+            part = jnp.einsum("rw,rw->r", fmt[f"v{lv}"], x[fmt[f"c{lv}"]])
+            y = y.at[fmt[f"r{lv}"]].add(part)
+        return y
+
+    return BaselineFormat("ACSR", fmt, jax.jit(fn), _bytes(fmt), padded)
+
+
+# ------------------------------ CSR-Adaptive ------------------------------
+
+def build_csr_adaptive(m: SparseMatrix, block_nnz: int = 256) -> BaselineFormat:
+    """CSR-Adaptive [22,34]: greedy row blocks of ~block_nnz nnz; CSR-Stream
+    within a block (segment reduce), vector-row for long rows."""
+    lengths = m.row_lengths()
+    row_ptr = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int64)
+    # greedy block boundaries on rows
+    bounds = [0]
+    acc = 0
+    for r in range(m.n_rows):
+        acc += lengths[r]
+        if acc >= block_nnz:
+            bounds.append(r + 1)
+            acc = 0
+    if bounds[-1] != m.n_rows:
+        bounds.append(m.n_rows)
+    bounds = np.asarray(bounds, np.int64)
+    # pad each block's nnz range to the max block nnz => rectangular gather
+    blk_lo = row_ptr[bounds[:-1]]
+    blk_hi = row_ptr[bounds[1:]]
+    w = int((blk_hi - blk_lo).max()) if len(bounds) > 1 else max(m.nnz, 1)
+    B = len(bounds) - 1
+    vals = np.zeros((B, w), np.float32)
+    cols = np.zeros((B, w), np.int32)
+    rows = np.zeros((B, w), np.int32)
+    for b in range(B):
+        n = int(blk_hi[b] - blk_lo[b])
+        vals[b, :n] = m.vals[blk_lo[b]: blk_hi[b]]
+        cols[b, :n] = m.cols[blk_lo[b]: blk_hi[b]]
+        rows[b, :n] = m.rows[blk_lo[b]: blk_hi[b]]
+        if n < w:
+            rows[b, n:] = rows[b, max(n - 1, 0)]
+    fmt = {"vals": jnp.asarray(vals), "cols": jnp.asarray(cols),
+           "rows": jnp.asarray(rows)}
+    n_rows = m.n_rows
+
+    def fn(fmt, x):
+        prod = fmt["vals"] * x[fmt["cols"]]
+        return jax.ops.segment_sum(prod.reshape(-1),
+                                   fmt["rows"].reshape(-1),
+                                   num_segments=n_rows)
+
+    return BaselineFormat("CSR-Adaptive", fmt, jax.jit(fn), _bytes(fmt), B * w)
+
+
+BASELINES: dict[str, Callable[[SparseMatrix], BaselineFormat]] = {
+    "CSR": build_csr,
+    "COO": build_coo,
+    "ELL": build_ell,
+    "SELL": build_sell,
+    "HYB": build_hyb,
+    "Merge": build_merge,
+    "ACSR": build_acsr,
+    "CSR-Adaptive": build_csr_adaptive,
+}
+
+
+def build_baseline(name: str, m: SparseMatrix) -> BaselineFormat:
+    return BASELINES[name](m)

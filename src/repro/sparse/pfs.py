@@ -1,0 +1,64 @@
+"""Perfect Format Selector (paper §VII-B).
+
+"As a performance-first auto-tuner, PFS does not rely on probabilistic
+models ... it can certainly select the best formats by directly running
+SpMV of all candidate formats." We reproduce it verbatim: build every
+baseline, time each, return the winner. This is the strongest possible
+representative of the traditional format-selection auto-tuning philosophy
+— any speedup AlphaSparse shows over PFS is attributable to *creating*
+formats rather than *selecting* them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.matrices import SparseMatrix
+from .baselines import BASELINES, BaselineFormat
+
+
+@dataclasses.dataclass
+class PFSResult:
+    best_name: str
+    best_seconds: float
+    best_format: BaselineFormat
+    all_seconds: dict[str, float]
+
+    @property
+    def gflops_table(self):
+        return {k: None for k in self.all_seconds}
+
+
+class PerfectFormatSelector:
+    def __init__(self, candidates: Optional[list[str]] = None,
+                 timing_repeats: int = 3):
+        self.candidates = candidates or list(BASELINES)
+        self.repeats = timing_repeats
+
+    def select(self, m: SparseMatrix, x: Optional[np.ndarray] = None,
+               check_oracle: bool = True) -> PFSResult:
+        if x is None:
+            x = np.random.default_rng(0).standard_normal(m.n_cols).astype(
+                np.float32)
+        oracle = m.spmv_dense_oracle(x) if check_oracle else None
+        times: dict[str, float] = {}
+        fmts: dict[str, BaselineFormat] = {}
+        for name in self.candidates:
+            f = BASELINES[name](m)
+            y = np.asarray(f(x))
+            if oracle is not None:
+                scale = np.abs(oracle).max() + 1e-30
+                assert np.all(np.abs(y - oracle) <= 1e-3 * scale + 1e-5), \
+                    f"baseline {name} produced wrong results"
+            best = float("inf")
+            for _ in range(self.repeats):
+                t0 = time.perf_counter()
+                f(x).block_until_ready()
+                best = min(best, time.perf_counter() - t0)
+            times[name] = best
+            fmts[name] = f
+        winner = min(times, key=times.get)
+        return PFSResult(winner, times[winner], fmts[winner], times)

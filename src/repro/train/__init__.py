@@ -1,0 +1,2 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, lr_schedule  # noqa: F401
+from .step import TrainConfig, make_train_step  # noqa: F401

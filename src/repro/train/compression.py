@@ -1,0 +1,66 @@
+"""Gradient compression for the cross-pod (DCN) reduction.
+
+At 1000+ nodes the scarce resource is inter-pod bandwidth. We compress
+gradients to int8 with per-chunk scales and error feedback before the pod-
+axis all-reduce: the int8 payload (+ fp32 scales, 1/256 overhead) is what
+crosses DCN; the intra-pod (ICI) reduction stays fp32.
+
+Inside a single jitted SPMD program we model this as
+quantise -> psum -> dequantise (the wire payload is the quantised tensor);
+error feedback keeps the *residual* of quantisation locally and re-adds it
+next step so the scheme is unbiased over time (1-bit-Adam-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressionConfig", "compress_decompress", "init_error_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = False
+    chunk: int = 256          # values per scale
+    bits: int = 8
+
+
+def init_error_state(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def _quantize_leaf(g: jax.Array, chunk: int, bits: int):
+    """Symmetric per-chunk int quantisation. Returns (q, scale, residual)."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % chunk
+    flat = jnp.pad(flat, (0, pad))
+    c = flat.reshape(-1, chunk)
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.max(jnp.abs(c), axis=1, keepdims=True) / qmax + 1e-12
+    q = jnp.clip(jnp.round(c / scale), -qmax, qmax)
+    deq = q * scale
+    resid = (c - deq).reshape(-1)[: g.size].reshape(g.shape)
+    return deq.reshape(-1)[: g.size].reshape(g.shape), resid
+
+
+def compress_decompress(cfg: CompressionConfig, grads, error_state):
+    """Apply error-feedback quantisation to a gradient pytree.
+
+    Returns (grads_for_reduce, new_error_state). The caller all-reduces
+    ``grads_for_reduce`` over the pod axis — on the wire that tensor is
+    int8+scales; here it is its dequantised value (bit-identical math)."""
+    if not cfg.enabled:
+        return grads, error_state
+
+    def leaf(g, e):
+        deq, resid = _quantize_leaf(g + e, cfg.chunk, cfg.bits)
+        return deq, resid
+
+    out = jax.tree.map(leaf, grads, error_state)
+    deq = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return deq, err

@@ -1,0 +1,115 @@
+"""The jitted train step: loss -> grads -> (compressed) reduce -> AdamW.
+
+Built once per (arch, mesh); used both by the real training driver
+(``launch/train.py``) and the multi-pod dry-run (lower + compile only).
+
+Gradient accumulation: ``grad_accum > 1`` scans micro-batches inside the
+step (the batch's leading dim is split), overlapping each micro-batch's
+backward with the next forward load; the optimizer update happens once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import loss_fn
+from .optimizer import AdamWConfig, adamw_update
+from .compression import CompressionConfig, compress_decompress
+
+__all__ = ["TrainConfig", "make_train_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    compression: CompressionConfig = CompressionConfig()
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    grad_accum: int = 1
+    block_kv: Optional[int] = None
+    scan_unroll: int = 1
+    act_dp: Optional[tuple] = None   # dp axes for activation constraints
+    seq_shard: bool = False          # sequence parallelism (§Perf it4)
+    cast_params_bf16: bool = False   # cast weights BEFORE the FSDP gather:
+    # halves all-gather bytes (fp32 master copies stay in the optimizer)
+
+
+def make_train_step(cfg: ArchConfig, tc: TrainConfig, grad_specs=None):
+    """Returns train_step(state, batch) -> (state, metrics). state is a dict
+    {params, opt, err} (err present only with compression enabled).
+
+    ``grad_specs`` (optional PartitionSpec pytree matching params) anchors
+    gradient sharding to the FSDP layout, steering XLA to reduce-scatter
+    gradients instead of all-reducing them at full shape (§Perf iteration:
+    gradients are the largest tensor family in the step)."""
+    dtype = jnp.bfloat16 if tc.compute_dtype == "bfloat16" else jnp.float32
+
+    def loss_wrap(params, batch):
+        p = params
+        if tc.cast_params_bf16:
+            p = jax.tree.map(
+                lambda a: a.astype(jnp.bfloat16)
+                if a.dtype == jnp.float32 and a.ndim >= 2 else a, p)
+        return loss_fn(cfg, p, batch, compute_dtype=dtype,
+                       remat=tc.remat, block_kv=tc.block_kv,
+                       unroll=tc.scan_unroll, act_dp=tc.act_dp,
+                       seq_shard=tc.seq_shard)
+
+    grad_fn = jax.value_and_grad(loss_wrap, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tc.grad_accum > 1:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (l, parts), g = grad_fn(params, mb)
+                return (jax.tree.map(jnp.add, gacc, g), lacc + l), None
+
+            micro_batch = jax.tree.map(
+                lambda a: a.reshape(tc.grad_accum, a.shape[0] // tc.grad_accum,
+                                    *a.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), micro_batch)
+            grads = jax.tree.map(lambda g: g / tc.grad_accum, grads)
+            loss = loss / tc.grad_accum
+            parts = {}
+        else:
+            (loss, parts), grads = grad_fn(params, batch)
+        if grad_specs is not None:
+            from jax.sharding import PartitionSpec as _P
+            grads = jax.tree.map(
+                lambda g, sp: jax.lax.with_sharding_constraint(
+                    g, sp if isinstance(sp, _P) else _P()),
+                grads, grad_specs)
+
+        new_state = dict(state)
+        if tc.compression.enabled:
+            grads, new_err = compress_decompress(tc.compression, grads,
+                                                 state["err"])
+            new_state["err"] = new_err
+        # the data-parallel mean is implicit in jit/SPMD (batch sharded over
+        # dp axes => XLA inserts the gradient all-reduce; with compression
+        # the reduced payload is the quantised tensor).
+        new_params, new_opt, opt_metrics = adamw_update(
+            tc.opt, grads, params, state["opt"])
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        metrics = {"loss": loss, **opt_metrics, **parts}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_state(cfg: ArchConfig, tc: TrainConfig, params):
+    from .optimizer import adamw_init
+    state = {"params": params, "opt": adamw_init(params)}
+    if tc.compression.enabled:
+        from .compression import init_error_state
+        state["err"] = init_error_state(params)
+    return state

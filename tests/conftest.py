@@ -1,0 +1,28 @@
+import numpy as np
+import pytest
+
+from repro.core.matrices import (banded_matrix, powerlaw_matrix,
+                                 random_uniform_matrix)
+
+
+@pytest.fixture(scope="session")
+def small_irregular():
+    return powerlaw_matrix(400, 350, 6.0, 1.0, seed=11)
+
+
+@pytest.fixture(scope="session")
+def small_regular():
+    return banded_matrix(300, 3, seed=12)
+
+
+@pytest.fixture(scope="session")
+def small_uniform():
+    return random_uniform_matrix(256, 256, 0.02, seed=13)
+
+
+def assert_spmv_matches(m, program, rtol=1e-4):
+    x = np.random.default_rng(0).standard_normal(m.n_cols).astype(np.float32)
+    oracle = m.spmv_dense_oracle(x)
+    y = np.asarray(program(x))
+    scale = np.abs(oracle).max() + 1e-30
+    np.testing.assert_allclose(y, oracle, atol=rtol * scale, rtol=0)

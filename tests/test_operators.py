@@ -1,0 +1,175 @@
+"""Unit tests for converting/mapping/implementing operators (paper Table II)."""
+import numpy as np
+import pytest
+
+from repro.core.graph import GraphError, OperatorGraph, run_graph
+from repro.core.matrices import powerlaw_matrix
+from repro.core.metadata import EllTileLayout, SegTileLayout, from_matrix
+from repro.core.operators import OPERATORS, OpSpec, apply_op
+
+
+@pytest.fixture(scope="module")
+def m():
+    return powerlaw_matrix(200, 180, 5.0, 1.0, seed=3)
+
+
+def compressed(m):
+    return apply_op(from_matrix(m), OpSpec.make("COMPRESS"))
+
+
+def test_compress_drops_zeros_and_sorts(m):
+    meta = compressed(m)
+    b = meta.blocks[0]
+    assert np.all(b.vals != 0.0)
+    order = np.lexsort((b.cols, b.rows))
+    assert np.array_equal(order, np.arange(b.nnz))
+    assert meta.compressed
+
+
+def test_sort_orders_rows_by_length(m):
+    meta = apply_op(compressed(m), OpSpec.make("SORT"))
+    lengths = meta.blocks[0].row_lengths()
+    assert np.all(np.diff(lengths) <= 0)
+    # permutation preserved: row_ids is a permutation of original rows
+    assert np.array_equal(np.sort(meta.blocks[0].row_ids),
+                          np.arange(m.n_rows))
+
+
+def test_bin_partitions_rows(m):
+    meta = apply_op(compressed(m), OpSpec.make("BIN", n_bins=3))
+    assert len(meta.blocks) >= 2
+    all_rows = np.concatenate([b.row_ids for b in meta.blocks])
+    assert np.array_equal(np.sort(all_rows), np.arange(m.n_rows))
+    assert sum(b.nnz for b in meta.blocks) == m.nnz
+
+
+@pytest.mark.parametrize("strategy,kw", [
+    ("even_rows", {"parts": 3}),
+    ("even_nnz", {"parts": 3}),
+    ("len_mutation", {"factor": 4}),
+])
+def test_row_div(m, strategy, kw):
+    meta = apply_op(compressed(m),
+                    OpSpec.make("ROW_DIV", strategy=strategy, **kw))
+    assert sum(b.nnz for b in meta.blocks) == m.nnz
+    all_rows = np.concatenate([b.row_ids for b in meta.blocks])
+    assert np.array_equal(all_rows, np.arange(m.n_rows))  # order preserved
+
+
+def test_col_div_covers_all_nnz(m):
+    meta = apply_op(compressed(m), OpSpec.make("COL_DIV", parts=3))
+    assert sum(b.nnz for b in meta.blocks) == m.nnz
+    for b in meta.blocks:
+        assert b.col_span is not None
+        assert np.all(b.cols >= b.col_base)
+        assert np.all(b.cols < b.col_base + b.col_span)
+
+
+def test_ell_layout_invariants(m):
+    meta = apply_op(compressed(m), OpSpec.make("TILE_ROW_BLOCK", rows=8))
+    meta = apply_op(meta, OpSpec.make("LANE_ROW_BLOCK"))
+    layout = meta.blocks[0].layout
+    assert isinstance(layout, EllTileLayout)
+    assert layout.padded_nnz() >= m.nnz
+    # every original row appears exactly once across bucket rowmaps
+    rows = np.concatenate([bk.rowmap.ravel() for bk in layout.buckets])
+    rows = rows[rows >= 0]
+    assert np.array_equal(np.sort(rows), np.arange(m.n_rows))
+    # padded entries have val 0
+    for bk in layout.buckets:
+        nz_count = int((bk.vals != 0).sum())
+        assert nz_count <= m.nnz
+
+
+def test_seg_layout_invariants(m):
+    meta = apply_op(compressed(m),
+                    OpSpec.make("LANE_NNZ_BLOCK", chunk=64, lanes=8))
+    layout = meta.blocks[0].layout
+    assert isinstance(layout, SegTileLayout)
+    assert layout.padded_nnz() >= m.nnz
+    assert layout.seg_rows % 8 == 0
+    # local_row within bounds and nondecreasing inside each tile
+    lr = layout.local_row.reshape(layout.n_tiles, -1)
+    assert lr.max() < layout.seg_rows
+    assert np.all(np.diff(lr, axis=1) >= 0)
+    # seg_end consistent: last segment of each tile ends at chunk
+    chunk = lr.shape[1]
+    assert np.all(layout.seg_end[np.arange(layout.n_tiles),
+                                 lr[:, -1]] == chunk)
+
+
+def test_sort_tile_reduces_padding(m):
+    base = apply_op(compressed(m), OpSpec.make("TILE_ROW_BLOCK", rows=8))
+    plain = apply_op(base, OpSpec.make("LANE_ROW_BLOCK"))
+    sorted_ = apply_op(apply_op(base, OpSpec.make("SORT_TILE", window=16)),
+                       OpSpec.make("LANE_ROW_BLOCK"))
+    assert sorted_.padded_nnz() <= plain.padded_nnz()
+
+
+def test_graph_validation_rules(m):
+    # missing COMPRESS
+    g = OperatorGraph((OpSpec.make("SORT"),),
+                      ((OpSpec.make("LANE_ROW_BLOCK"),
+                        OpSpec.make("LANE_TOTAL_RED")),))
+    with pytest.raises(GraphError):
+        g.validate()
+    # illegal reducer for layout family
+    g = OperatorGraph.chain(OpSpec.make("COMPRESS"),
+                            OpSpec.make("LANE_ROW_BLOCK"),
+                            OpSpec.make("SEG_SCAN_RED"))
+    with pytest.raises(GraphError):
+        g.validate()
+    # SORT_TILE without TILE_ROW_BLOCK
+    g = OperatorGraph.chain(OpSpec.make("COMPRESS"),
+                            OpSpec.make("SORT_TILE", window=4),
+                            OpSpec.make("LANE_ROW_BLOCK"),
+                            OpSpec.make("LANE_TOTAL_RED"))
+    with pytest.raises(GraphError):
+        g.validate()
+    # mapping op after implementing op
+    g = OperatorGraph.chain(OpSpec.make("COMPRESS"),
+                            OpSpec.make("LANE_ROW_BLOCK"),
+                            OpSpec.make("LANE_TOTAL_RED"),
+                            OpSpec.make("LANE_PAD", pad_to=8))
+    with pytest.raises(GraphError):
+        g.validate()
+
+
+def test_operator_purity(m):
+    """D1: operators are pure — re-applying to the same input gives the
+    same output and never mutates the input."""
+    meta0 = compressed(m)
+    b0_vals = meta0.blocks[0].vals.copy()
+    a = apply_op(meta0, OpSpec.make("SORT"))
+    b = apply_op(meta0, OpSpec.make("SORT"))
+    assert np.array_equal(meta0.blocks[0].vals, b0_vals)
+    assert np.array_equal(a.blocks[0].row_ids, b.blocks[0].row_ids)
+
+
+def test_hyb_split_beyond_paper(m):
+    """Beyond-paper HYB_SPLIT (the paper's §VII-H missing operator):
+    per-row decomposition into regular + overflow branches whose partial
+    outputs sum correctly."""
+    from repro.core.kernel_builder import build_spmv
+    from repro.core.graph import OperatorGraph, run_graph
+    import numpy as np
+
+    g = OperatorGraph(
+        (OpSpec.make("COMPRESS"), OpSpec.make("HYB_SPLIT", q=0.5)),
+        ((OpSpec.make("TILE_ROW_BLOCK", rows=8),
+          OpSpec.make("LANE_ROW_BLOCK"), OpSpec.make("LANE_TOTAL_RED")),
+         (OpSpec.make("LANE_NNZ_BLOCK", chunk=128),
+          OpSpec.make("GMEM_ATOM_RED"))),
+        shared=False)
+    g.validate()
+    meta = run_graph(m, g)
+    assert len(meta.blocks) == 2
+    # regular branch is width-capped; both branches cover the same rows
+    assert np.array_equal(meta.blocks[0].row_ids, meta.blocks[1].row_ids)
+    assert meta.nnz == m.nnz
+    prog = build_spmv(meta, jit=False)
+    x = np.random.default_rng(0).standard_normal(m.n_cols).astype(np.float32)
+    oracle = m.spmv_dense_oracle(x)
+    scale = np.abs(oracle).max() + 1e-30
+    np.testing.assert_allclose(np.asarray(prog(x)), oracle,
+                               atol=1e-4 * scale, rtol=0)

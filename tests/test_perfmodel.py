@@ -1,0 +1,87 @@
+"""Analytic perf model sanity: magnitudes, MoE-active accounting, and the
+roofline pipeline over recorded dry-run artifacts (if present)."""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, get_config
+from repro.configs.base import SHAPE_CELLS
+
+import sys
+sys.path.insert(0, str(Path(__file__).parent.parent))
+from benchmarks import perfmodel  # noqa: E402
+
+
+TRAIN, PREFILL, DECODE = SHAPE_CELLS[0], SHAPE_CELLS[1], SHAPE_CELLS[2]
+
+
+def test_train_flops_close_to_6nd():
+    """Dense LM: executed train flops ~ (6+2 remat)/6 x MODEL_FLOPS +
+    attention overhead; ratio must land in a sane band."""
+    cfg = get_config("granite-3-2b")
+    c = perfmodel.cost_for(cfg, TRAIN, chips=256)
+    ratio = c.flops / c.model_flops
+    assert 1.1 < ratio < 2.5, ratio
+
+
+def test_moe_active_flops_much_smaller_than_total():
+    cfg = get_config("deepseek-moe-16b")
+    assert cfg.active_params_per_token() < 0.3 * cfg.n_params()
+    c = perfmodel.cost_for(cfg, TRAIN, chips=256)
+    dense_equiv = 8.0 * cfg.n_params() * TRAIN.global_batch * TRAIN.seq_len
+    assert c.flops < 0.5 * dense_equiv   # MoE saves compute
+
+
+def test_decode_flops_scale_with_batch_not_seq():
+    cfg = get_config("qwen3-8b")
+    c = perfmodel.cost_for(cfg, DECODE, chips=256)
+    per_tok = c.model_flops / DECODE.global_batch
+    assert abs(per_tok - 2 * cfg.active_params_per_token()) \
+        / (2 * cfg.active_params_per_token()) < 0.01
+
+
+def test_window_caps_attention_cost():
+    jam = get_config("jamba-v0.1-52b")
+    long_cell = SHAPE_CELLS[3]
+    c = perfmodel.cost_for(jam, long_cell, chips=256)
+    assert np.isfinite(c.flops)
+    # cache bytes: attention layers capped at window, not 512k
+    cache = perfmodel._cache_bytes(jam, 1, long_cell.seq_len)
+    uncapped = perfmodel._cache_bytes(
+        __import__("dataclasses").replace(jam, window=None), 1,
+        long_cell.seq_len)
+    assert cache < 0.05 * uncapped
+
+
+DRYRUN = Path("results/dryrun")
+
+
+@pytest.mark.skipif(not DRYRUN.exists() or not list(DRYRUN.glob("*.json")),
+                    reason="no dry-run artifacts recorded yet")
+def test_roofline_pipeline_over_artifacts():
+    from benchmarks import roofline
+    recs = roofline.load_records("pod16x16")
+    assert recs, "expected single-pod dry-run records"
+    rows = [roofline.analyse_record(r) for r in recs]
+    for r in rows:
+        assert r["compute_s"] > 0
+        assert r["memory_s"] > 0
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert 0 <= r["roofline_fraction"] <= 1.5
+    # the full baseline table covers every assigned arch
+    assert {r["arch"] for r in rows} == set(REGISTRY)
+
+
+@pytest.mark.skipif(not DRYRUN.exists() or not list(DRYRUN.glob("*.json")),
+                    reason="no dry-run artifacts recorded yet")
+def test_dryrun_all_cells_ok():
+    """Deliverable e: every recorded (arch x shape x mesh) compile is ok."""
+    recs = [json.loads(p.read_text()) for p in DRYRUN.glob("*.json")]
+    bad = [r for r in recs if not r.get("ok")]
+    assert not bad, [(r["arch"], r["shape"], r.get("error", "")[:80])
+                     for r in bad]
+    # both meshes present
+    meshes = {r["mesh"] for r in recs}
+    assert {"pod16x16", "pod2x16x16"} <= meshes

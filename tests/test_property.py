@@ -1,0 +1,150 @@
+"""Property-based tests (hypothesis): system invariants of AlphaSparse.
+
+The central invariant (paper §V: "any errors ... would cause incorrect
+SpMV"): EVERY valid Operator Graph applied to ANY matrix must produce a
+program whose output matches the float64 dense oracle.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compress import affine_rowmap, fit_array
+from repro.core.graph import OperatorGraph, run_graph
+from repro.core.kernel_builder import build_spmv
+from repro.core.matrices import SparseMatrix
+from repro.core.operators import OpSpec
+
+
+# ------------------------- strategies --------------------------------------
+
+@st.composite
+def sparse_matrices(draw):
+    n_rows = draw(st.integers(4, 120))
+    n_cols = draw(st.integers(4, 120))
+    nnz = draw(st.integers(1, 400))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    skew = draw(st.sampled_from(["uniform", "rowheavy", "diag"]))
+    if skew == "uniform":
+        rows = rng.integers(0, n_rows, nnz)
+        cols = rng.integers(0, n_cols, nnz)
+    elif skew == "rowheavy":
+        hot = rng.integers(0, n_rows)
+        rows = np.where(rng.random(nnz) < 0.5, hot,
+                        rng.integers(0, n_rows, nnz))
+        cols = rng.integers(0, n_cols, nnz)
+    else:
+        rows = rng.integers(0, min(n_rows, n_cols), nnz)
+        cols = np.minimum(rows + rng.integers(0, 3, nnz), n_cols - 1)
+    vals = rng.standard_normal(nnz)
+    m = SparseMatrix(n_rows, n_cols, rows.astype(np.int32),
+                     cols.astype(np.int32), vals.astype(np.float32))
+    return m.canonical()
+
+
+@st.composite
+def operator_graphs(draw):
+    conv = [OpSpec.make("COMPRESS")]
+    pre = draw(st.sampled_from([None, "SORT", "BIN", "ROW_DIV", "COL_DIV"]))
+    if pre == "BIN":
+        conv.append(OpSpec.make("BIN", n_bins=draw(st.integers(2, 4))))
+    elif pre == "ROW_DIV":
+        conv.append(OpSpec.make(
+            "ROW_DIV",
+            strategy=draw(st.sampled_from(["even_rows", "even_nnz",
+                                           "len_mutation"])),
+            parts=draw(st.integers(2, 4)), factor=4))
+    elif pre == "COL_DIV":
+        conv.append(OpSpec.make("COL_DIV", parts=draw(st.integers(2, 3))))
+    elif pre == "SORT":
+        conv.append(OpSpec.make("SORT"))
+    if pre in ("BIN", "ROW_DIV") and draw(st.booleans()):
+        conv.append(OpSpec.make("SORT_SUB"))
+
+    family = draw(st.sampled_from(["ell", "seg", "onehot", "atom"]))
+    chain = []
+    if family == "ell":
+        if draw(st.booleans()):
+            chain.append(OpSpec.make("TILE_ROW_BLOCK",
+                                     rows=draw(st.sampled_from([4, 8, 16]))))
+            if draw(st.booleans()):
+                chain.append(OpSpec.make("SORT_TILE",
+                                         window=draw(st.sampled_from([2, 8]))))
+        if draw(st.booleans()):
+            chain.append(OpSpec.make("LANE_PAD",
+                                     pad_to=draw(st.sampled_from([1, 4, 8]))))
+        chain.append(OpSpec.make("LANE_ROW_BLOCK"))
+        chain.append(OpSpec.make(
+            "LANE_TOTAL_RED",
+            combine=draw(st.sampled_from(["scatter", "grid_acc"]))))
+    else:
+        chain.append(OpSpec.make("LANE_NNZ_BLOCK",
+                                 chunk=draw(st.sampled_from([16, 64, 256])),
+                                 lanes=draw(st.sampled_from([4, 8, 16]))))
+        red = {"seg": "SEG_SCAN_RED", "onehot": "ONEHOT_MXU_RED",
+               "atom": "GMEM_ATOM_RED"}[family]
+        chain.append(OpSpec.make(red))
+    return OperatorGraph(tuple(conv), (tuple(chain),), shared=True)
+
+
+# ------------------------- the invariant ------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(m=sparse_matrices(), g=operator_graphs())
+def test_any_valid_graph_is_correct(m, g):
+    """Generated program == dense oracle, for every (matrix, graph)."""
+    if m.nnz == 0:
+        return
+    g.validate()
+    meta = run_graph(m, g)
+    assert meta.nnz == m.nnz  # conversion never loses non-zeros
+    assert meta.padded_nnz() >= m.nnz
+    prog = build_spmv(meta, jit=False)
+    x = np.random.default_rng(0).standard_normal(m.n_cols).astype(np.float32)
+    oracle = m.spmv_dense_oracle(x)
+    y = np.asarray(prog(x))
+    scale = float(np.abs(oracle).max()) + 1e-30
+    np.testing.assert_allclose(y, oracle, atol=2e-4 * scale + 1e-5, rtol=0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=sparse_matrices())
+def test_row_coverage_partition(m):
+    """BIN/ROW_DIV partition rows exactly (no loss, no duplication)."""
+    if m.nnz == 0:
+        return
+    g = OperatorGraph.chain(OpSpec.make("COMPRESS"),
+                            OpSpec.make("BIN", n_bins=3),
+                            OpSpec.make("LANE_ROW_BLOCK"),
+                            OpSpec.make("LANE_TOTAL_RED"))
+    meta = run_graph(m, g)
+    rows = np.concatenate([b.row_ids for b in meta.blocks])
+    assert np.array_equal(np.sort(rows), np.arange(m.n_rows))
+
+
+# --------------------- model-driven compression ----------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(a=st.integers(-5, 5), b=st.integers(-100, 100), n=st.integers(3, 500),
+       seed=st.integers(0, 10_000), n_exc=st.integers(0, 2))
+def test_fit_array_linear_with_exceptions(a, b, n, seed, n_exc):
+    arr = a * np.arange(n, dtype=np.int64) + b
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(n, size=min(n_exc, n), replace=False)
+    arr[idx] += rng.integers(1, 100, idx.size)
+    model = fit_array(arr, max_exc_frac=max(2, n_exc) / max(n, 1) + 0.01)
+    if model is not None:
+        np.testing.assert_array_equal(model.evaluate(), arr)
+
+
+@settings(max_examples=50, deadline=None)
+@given(a=st.integers(1, 7), b=st.integers(0, 10), n=st.integers(4, 300),
+       pad=st.integers(0, 5))
+def test_affine_rowmap_detection(a, b, n, pad):
+    flat = np.concatenate([a * np.arange(n) + b, -np.ones(pad, np.int64)])
+    got = affine_rowmap(flat)
+    assert got == (a, b)
+    # a hole breaks affinity
+    if n > 4:
+        flat2 = flat.copy()
+        flat2[2] = -1
+        assert affine_rowmap(flat2) is None

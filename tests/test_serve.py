@@ -1,0 +1,65 @@
+"""Serving engine + SparseLinear integration tests."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serve import ServeConfig, ServingEngine
+from repro.serve.engine import Request
+from repro.serve.sparse_linear import prune_magnitude, sparsify_linear
+
+
+def test_engine_serves_all_requests():
+    cfg = get_config("granite-3-2b").reduced()
+    eng = ServingEngine(cfg, ServeConfig(max_batch=2, max_seq=64,
+                                         max_new_tokens=6))
+    reqs = [Request(i, np.arange(4) + i) for i in range(5)]
+    out = eng.run(reqs)
+    assert out["requests"] == 5
+    assert all(r.done for r in reqs)
+    assert all(len(r.out_tokens) == 6 for r in reqs)
+
+
+def test_engine_greedy_deterministic():
+    cfg = get_config("granite-3-2b").reduced()
+    outs = []
+    for _ in range(2):
+        eng = ServingEngine(cfg, ServeConfig(max_batch=1, max_seq=64,
+                                             max_new_tokens=5))
+        req = Request(0, np.array([1, 2, 3]))
+        eng.run([req])
+        outs.append(tuple(req.out_tokens))
+    assert outs[0] == outs[1]
+
+
+def test_prune_magnitude_density():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((64, 64))
+    m = prune_magnitude(w, 0.1)
+    assert abs(m.nnz / (64 * 64) - 0.1) < 0.02
+    # kept entries are the largest-magnitude ones
+    assert np.abs(m.vals).min() >= np.quantile(np.abs(w), 0.88)
+
+
+def test_sparse_linear_batched_correct():
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((96, 80)).astype(np.float32)
+    sl = sparsify_linear(w, density=0.15, do_search=False)
+    x = rng.standard_normal((3, 80)).astype(np.float32)
+    y = np.asarray(sl(x))
+    want = x @ sl.matrix.to_dense().T.astype(np.float32)
+    np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_linear_with_search():
+    rng = np.random.default_rng(2)
+    w = rng.standard_normal((128, 128)).astype(np.float32)
+    from repro.core import SearchConfig
+    sl = sparsify_linear(w, density=0.05, do_search=True,
+                         search_config=SearchConfig(
+                             max_seconds=10, max_structures=4,
+                             coarse_samples=3, timing_repeats=1))
+    x = rng.standard_normal(128).astype(np.float32)
+    y = np.asarray(sl(x))
+    want = sl.matrix.to_dense() @ x
+    np.testing.assert_allclose(y, want, rtol=1e-3, atol=1e-4)
+    assert sl.search_gflops is not None
