@@ -1,0 +1,57 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DIST_DEVICES", "8"))
+"""Sharded-SpMV scaling benchmark: one matrix, shard counts 1..N.
+
+On CPU the forced-host-device mesh shares one physical core set, so this
+measures *overhead* scaling (switch dispatch, padding, psum), not speedup —
+the per-shard work split and combine volume are the quantities that carry
+to a real mesh. Emits the scaffold CSV contract via benchmarks.common.emit.
+
+NOTE the XLA_FLAGS line must run before the first jax import (device count
+locks at init), which forces the docstring below the env setup.
+
+Usage:
+  PYTHONPATH=src:benchmarks python benchmarks/dist_scaling.py
+"""
+import numpy as np
+import jax
+
+from common import bench_suite, emit, gflops, time_call
+from repro.dist.spmv import shard_map_spmv
+
+SHARD_COUNTS = (1, 2, 4, 8)
+MATRICES = ("uniform_reg", "powerlaw_hard")
+
+
+def main():
+    n_dev = len(jax.devices())
+    suite = bench_suite()
+    for mat_name in MATRICES:
+        m = suite[mat_name]
+        x = np.random.default_rng(0).standard_normal(
+            m.n_cols).astype(np.float32)
+        oracle = m.spmv_dense_oracle(x)
+        scale = np.abs(oracle).max() + 1e-30
+        for n_shards in SHARD_COUNTS:
+            if n_shards > n_dev:
+                continue
+            mesh = jax.make_mesh((n_shards,), ("data",))
+            for mode in ("row", "col"):
+                prog = shard_map_spmv(m, mesh, mode=mode)
+                y = np.asarray(prog(x))
+                assert np.abs(y - oracle).max() < 1e-4 * scale, \
+                    (mat_name, n_shards, mode)
+                t = time_call(prog, x)
+                nnz_max = max(s.matrix.nnz for s in prog.shards)
+                emit(f"dist_spmv.{mat_name}.{mode}.s{n_shards}",
+                     t * 1e6,
+                     f"gflops={gflops(m.nnz, t):.3f};"
+                     f"max_shard_nnz={nnz_max};"
+                     f"imbalance={nnz_max * n_shards / m.nnz:.2f}")
+
+
+if __name__ == "__main__":
+    main()

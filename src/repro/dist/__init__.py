@@ -1,0 +1,13 @@
+"""Distributed layer: mesh-driven sharding rules + sharded SpMV.
+
+``sharding``  — config+mesh PartitionSpec rules for params/batches/caches.
+``spmv``      — row/column partitioning of a SparseMatrix over the ``data``
+                mesh axis and shard_map execution of per-shard programs.
+``search``    — per-shard AlphaSparse search (each partition gets its own
+                machine-designed format).
+"""
+from .sharding import (ShardingRules, batch_specs, cache_specs, dp_axes,  # noqa: F401
+                       param_specs)
+from .spmv import (RowShard, ShardedSpmvProgram, partition_matrix,  # noqa: F401
+                   shard_map_spmv)
+from .search import ShardedSearchConfig, ShardedSearchResult, dist_search  # noqa: F401

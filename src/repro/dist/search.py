@@ -1,0 +1,106 @@
+"""Per-shard AlphaSparse search: each partition gets its own machine-
+designed format.
+
+Auto-SpMV-style motivation (PAPERS.md, arXiv 2302.05662): tuning decisions
+that are optimal globally are rarely optimal per partition. A power-law
+matrix split by nnz yields shards of very different regularity — the
+head-row shard is irregular (SEG-family designs win), the tail shards are
+near-uniform (ELL-family designs win). Running the §VI search independently
+per shard lets the distributed format be heterogeneous.
+
+Determinism: shard i searches with ``seed + i`` derived from one base seed,
+so the explored structure sequence is reproducible per shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.matrices import SparseMatrix
+from repro.core.search import AlphaSparseSearch, SearchConfig, SearchResult
+from repro.core.graph import run_graph
+from repro.core.kernel_builder import build_spmv
+
+from .spmv import (RowShard, ShardedSpmvProgram, _axis_size,
+                   build_sharded_spmv, default_shard_graph, partition_matrix)
+
+__all__ = ["ShardedSearchConfig", "ShardReport", "ShardedSearchResult",
+           "dist_search"]
+
+
+def _default_budget() -> SearchConfig:
+    # per-shard budget: shards are ~1/n_shards of the matrix, so the §VI
+    # wall-clock budget shrinks accordingly
+    return SearchConfig(max_seconds=10.0, max_structures=4, coarse_samples=3,
+                        fine_eval_budget=3, timing_repeats=2)
+
+
+@dataclasses.dataclass
+class ShardedSearchConfig:
+    axis_name: str = "data"
+    mode: str = "row"                 # 'row' | 'col'
+    balance: str = "nnz"              # row-boundary strategy
+    search: SearchConfig = dataclasses.field(default_factory=_default_budget)
+    seed: int = 0
+    # shards below this nnz skip the search and take the heuristic design
+    # (a search on a near-empty shard is all compile overhead, no signal)
+    min_nnz_for_search: int = 256
+    backend: str = "jax"
+
+
+@dataclasses.dataclass
+class ShardReport:
+    shard: RowShard
+    searched: bool
+    graph_label: Optional[str]
+    result: Optional[SearchResult]    # None when heuristic / empty
+
+    @property
+    def family(self) -> Optional[str]:
+        if self.graph_label is None:
+            return None
+        return "SEG" if "LANE_NNZ_BLOCK" in self.graph_label else "ELL"
+
+
+@dataclasses.dataclass
+class ShardedSearchResult:
+    program: ShardedSpmvProgram
+    reports: list[ShardReport]
+
+    def families(self) -> list[Optional[str]]:
+        return [r.family for r in self.reports]
+
+    def is_heterogeneous(self) -> bool:
+        fams = {f for f in self.families() if f is not None}
+        return len(fams) > 1
+
+
+def dist_search(m: SparseMatrix, mesh,
+                config: Optional[ShardedSearchConfig] = None
+                ) -> ShardedSearchResult:
+    """Partition ``m`` over the mesh and run one AlphaSparse search per
+    shard; returns the compiled sharded program plus per-shard reports."""
+    cfg = config or ShardedSearchConfig()
+    n_shards = _axis_size(mesh, cfg.axis_name)
+    shards = partition_matrix(m, n_shards, mode=cfg.mode, balance=cfg.balance)
+    programs, reports = [], []
+    for s in shards:
+        if s.is_empty:
+            programs.append(None)
+            reports.append(ShardReport(s, False, None, None))
+            continue
+        if s.matrix.nnz >= cfg.min_nnz_for_search:
+            scfg = dataclasses.replace(cfg.search,
+                                       seed=cfg.seed + cfg.search.seed
+                                       + s.index,
+                                       backend=cfg.backend)
+            res = AlphaSparseSearch(s.matrix, scfg).run()
+            programs.append(res.best_program)
+            reports.append(ShardReport(s, True, res.best_graph.label(), res))
+        else:
+            g = default_shard_graph(s.matrix)
+            meta = run_graph(s.matrix, g)
+            programs.append(build_spmv(meta, backend=cfg.backend))
+            reports.append(ShardReport(s, False, g.label(), None))
+    program = build_sharded_spmv(shards, programs, mesh, cfg.axis_name)
+    return ShardedSearchResult(program=program, reports=reports)

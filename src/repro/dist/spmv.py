@@ -1,0 +1,269 @@
+"""Sharded SpMV: partition a SparseMatrix over the ``data`` mesh axis and
+execute one machine-designed program per shard under ``shard_map``.
+
+AlphaSparse designs a format *per matrix*; here the device mesh is one more
+level of the hardware hierarchy, so the unit of design becomes the *shard*:
+each partition may end up with a different machine-designed format (an
+irregular shard picks a SEG design while a regular shard picks ELL — see
+``dist.search``). Heterogeneous per-shard programs still compile to a single
+SPMD program: the shard_map body branches on ``lax.axis_index`` with
+``lax.switch``; every device *executes* only its own shard's kernel.
+
+Known limitation (ROADMAP "Open items"): the per-shard format arrays are
+closed-over constants of that one SPMD program, so every device currently
+*stores* all shards' formats — compute scales with 1/N but format memory
+does not. De-duplicating storage needs per-family format stacking passed
+as sharded shard_map operands.
+
+Two partition modes:
+
+* ``row``  — shard i owns a contiguous row band (boundaries balanced by
+  rows or by nnz). x is replicated; each device emits its padded band of y
+  and the bands are concatenated. No cross-device reduction.
+* ``col``  — the distributed analogue of the paper's COL_DIV operator:
+  shard i owns a uniform column slice and computes a full-length *partial*
+  y from its x slice; partials are combined with ``lax.psum`` inside the
+  shard_map body (the COL_DIV partial-sum combine step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.graph import OperatorGraph, run_graph
+from repro.core.kernel_builder import SpmvProgram, build_spmv
+from repro.core.matrices import SparseMatrix
+from repro.core.operators import OpSpec
+
+__all__ = ["RowShard", "partition_matrix", "ShardedSpmvProgram",
+           "build_sharded_spmv", "shard_map_spmv", "default_shard_graph"]
+
+
+def _axis_size(mesh, axis_name: str) -> int:
+    sizes = dict(mesh.shape)
+    if axis_name not in sizes:
+        raise ValueError(f"mesh has no {axis_name!r} axis (axes: "
+                         f"{tuple(sizes)}); build one with "
+                         "launch.mesh.make_data_mesh")
+    return int(sizes[axis_name])
+
+
+@dataclasses.dataclass(frozen=True)
+class RowShard:
+    """One partition: a local-index-space sub-matrix plus its global slice.
+
+    ``row`` mode: rows [start, stop) of the global matrix, all columns.
+    ``col`` mode: cols [start, stop) of the global matrix, all rows.
+    """
+
+    index: int
+    start: int
+    stop: int
+    matrix: SparseMatrix
+    mode: str = "row"
+
+    @property
+    def size(self) -> int:
+        return self.stop - self.start
+
+    @property
+    def is_empty(self) -> bool:
+        return self.matrix.nnz == 0
+
+
+def _row_boundaries(m: SparseMatrix, n_shards: int, balance: str) -> np.ndarray:
+    if balance == "rows":
+        return np.linspace(0, m.n_rows, n_shards + 1).astype(np.int64)
+    # nnz-balanced: split the cumulative row-nnz curve into equal arcs, so a
+    # power-law matrix doesn't starve most devices while one holds the tail.
+    cum = np.concatenate([[0], np.cumsum(m.row_lengths())])
+    targets = np.linspace(0, m.nnz, n_shards + 1)
+    bounds = np.searchsorted(cum, targets, side="left")
+    bounds[0], bounds[-1] = 0, m.n_rows
+    return np.maximum.accumulate(bounds).astype(np.int64)
+
+
+def partition_matrix(m: SparseMatrix, n_shards: int, mode: str = "row",
+                     balance: str = "nnz") -> list[RowShard]:
+    """Split ``m`` into ``n_shards`` contiguous shards in local index space.
+
+    Shards may be empty (0 nnz, possibly 0 rows) when ``n_shards`` exceeds
+    the number of populated bands; callers get a ``None`` program for those.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    shards = []
+    if mode == "row":
+        bounds = _row_boundaries(m, n_shards, balance)
+        for i in range(n_shards):
+            lo, hi = int(bounds[i]), int(bounds[i + 1])
+            keep = (m.rows >= lo) & (m.rows < hi)
+            sub = SparseMatrix(hi - lo, m.n_cols,
+                               (m.rows[keep] - lo).astype(np.int32),
+                               m.cols[keep].astype(np.int32),
+                               m.vals[keep].astype(np.float32))
+            shards.append(RowShard(i, lo, hi, sub, mode="row"))
+    elif mode == "col":
+        # uniform slice width: the sharded x layout must be an even split.
+        # Trailing shards can be degenerate (n_shards*width > n_cols):
+        # clamp both bounds to n_cols so shard bounds still tile [0, n_cols)
+        width = -(-m.n_cols // n_shards)
+        for i in range(n_shards):
+            lo = min(i * width, m.n_cols)
+            hi = min((i + 1) * width, m.n_cols)
+            keep = (m.cols >= lo) & (m.cols < hi)
+            sub = SparseMatrix(m.n_rows, hi - lo,
+                               m.rows[keep].astype(np.int32),
+                               (m.cols[keep] - lo).astype(np.int32),
+                               m.vals[keep].astype(np.float32))
+            shards.append(RowShard(i, lo, hi, sub, mode="col"))
+    else:
+        raise ValueError(f"unknown partition mode {mode!r}")
+    return shards
+
+
+ELL_GRAPH = OperatorGraph.chain(
+    OpSpec.make("COMPRESS"), OpSpec.make("TILE_ROW_BLOCK", rows=16),
+    OpSpec.make("LANE_ROW_BLOCK"), OpSpec.make("LANE_TOTAL_RED"))
+SEG_GRAPH = OperatorGraph.chain(
+    OpSpec.make("COMPRESS"), OpSpec.make("LANE_NNZ_BLOCK", chunk=128, lanes=8),
+    OpSpec.make("SEG_SCAN_RED"))
+
+
+def default_shard_graph(m: SparseMatrix) -> OperatorGraph:
+    """Search-free per-shard design: the paper's regularity split (§VI-B) —
+    regular shards take a tiled-ELL design, irregular ones a SEG design."""
+    return SEG_GRAPH if m.is_irregular() else ELL_GRAPH
+
+
+@dataclasses.dataclass
+class ShardedSpmvProgram:
+    """A compiled sharded SpMV: y = A @ x across the mesh ``data`` axis."""
+
+    n_rows: int
+    n_cols: int
+    mode: str
+    shards: list[RowShard]
+    programs: list[Optional[SpmvProgram]]
+    mesh: object
+    axis_name: str
+    _fn: Callable = dataclasses.field(repr=False, default=None)
+
+    @property
+    def nnz(self) -> int:
+        return sum(s.matrix.nnz for s in self.shards)
+
+    @property
+    def stored_bytes(self) -> int:
+        return sum(p.stored_bytes for p in self.programs if p is not None)
+
+    def descriptor(self) -> list[dict]:
+        out = []
+        for s, p in zip(self.shards, self.programs):
+            out.append({"shard": s.index, "start": s.start, "stop": s.stop,
+                        "nnz": s.matrix.nnz,
+                        "design": None if p is None
+                        else p.descriptor["blocks"]})
+        return out
+
+    def __call__(self, x) -> jax.Array:
+        x = jnp.asarray(x, jnp.float32)
+        if x.ndim == 2:
+            return jax.vmap(self._apply)(x)
+        return self._apply(x)
+
+    def _apply(self, x) -> jax.Array:
+        if self.mode == "col":
+            width = -(-self.n_cols // len(self.shards))
+            pad = width * len(self.shards) - self.n_cols
+            return self._fn(jnp.pad(x, (0, pad)))
+        out = self._fn(x)  # (n_shards, R) padded row bands
+        pieces = [out[i, : s.size] for i, s in enumerate(self.shards)]
+        return jnp.concatenate(pieces) if pieces else out[:, :0].reshape(-1)
+
+
+def build_sharded_spmv(shards: Sequence[RowShard],
+                       programs: Sequence[Optional[SpmvProgram]],
+                       mesh, axis_name: str = "data") -> ShardedSpmvProgram:
+    """Compile per-shard programs into one SPMD shard_map program."""
+    shards = list(shards)
+    programs = list(programs)
+    n_shards = _axis_size(mesh, axis_name)
+    if len(shards) != n_shards:
+        raise ValueError(f"{len(shards)} shards for a {n_shards}-way "
+                         f"'{axis_name}' mesh axis")
+    mode = shards[0].mode if shards else "row"
+    if mode == "row":
+        n_rows = shards[-1].stop if shards else 0
+        n_cols = shards[0].matrix.n_cols if shards else 0
+        R = max((s.size for s in shards), default=0)
+
+        def branch(prog, size):
+            def run(x):
+                if prog is None:
+                    return jnp.zeros((1, R), jnp.float32)
+                y = prog(x).astype(jnp.float32)
+                return jnp.pad(y, (0, R - size))[None]
+            return run
+
+        branches = [branch(p, s.size) for p, s in zip(programs, shards)]
+
+        def body(x):
+            return jax.lax.switch(jax.lax.axis_index(axis_name), branches, x)
+
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=P(None),
+                               out_specs=P(axis_name, None), check_rep=False))
+    else:
+        n_rows = shards[0].matrix.n_rows if shards else 0
+        n_cols = shards[-1].stop if shards else 0
+        width = -(-n_cols // n_shards) if n_shards else 0
+
+        def branch(prog, w):
+            def run(x_local):
+                if prog is None:
+                    return jnp.zeros((n_rows,), jnp.float32)
+                return prog(x_local[:w]).astype(jnp.float32)
+            return run
+
+        branches = [branch(p, s.matrix.n_cols)
+                    for p, s in zip(programs, shards)]
+
+        def body(x_local):
+            y = jax.lax.switch(jax.lax.axis_index(axis_name), branches,
+                               x_local)
+            # the COL_DIV combine step: sum per-slice partial products
+            return jax.lax.psum(y, axis_name)
+
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=P(axis_name),
+                               out_specs=P(None), check_rep=False))
+    return ShardedSpmvProgram(n_rows=n_rows, n_cols=n_cols, mode=mode,
+                              shards=shards, programs=programs, mesh=mesh,
+                              axis_name=axis_name, _fn=fn)
+
+
+def shard_map_spmv(m: SparseMatrix, mesh, axis_name: str = "data",
+                   mode: str = "row", balance: str = "nnz",
+                   graph_for: Callable[[SparseMatrix], OperatorGraph]
+                   = default_shard_graph,
+                   backend: str = "jax") -> ShardedSpmvProgram:
+    """Search-free sharded SpMV: partition + per-shard heuristic design.
+
+    ``dist.search.dist_search`` is the searched variant (one AlphaSparse
+    search per shard); this one is the cheap path for serving and tests.
+    """
+    n_shards = _axis_size(mesh, axis_name)
+    shards = partition_matrix(m, n_shards, mode=mode, balance=balance)
+    programs = []
+    for s in shards:
+        if s.is_empty:
+            programs.append(None)
+        else:
+            meta = run_graph(s.matrix, graph_for(s.matrix))
+            programs.append(build_spmv(meta, backend=backend))
+    return build_sharded_spmv(shards, programs, mesh, axis_name)

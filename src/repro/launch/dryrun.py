@@ -217,6 +217,8 @@ def run_cell(cfg: ArchConfig, cell: ShapeCell, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, list):   # some jax versions return [dict]
+            ca = ca[0] if ca else {}
         ma = compiled.memory_analysis()
         rec.update({
             "ok": True,

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_data_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -26,3 +26,10 @@ def make_local_mesh(data: int = 1, model: int = 1, pod: int | None = None):
     if pod is not None:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_data_mesh(data: int | None = None):
+    """1-D ('data',) mesh for sharded SpMV (``repro.dist``). Defaults to
+    every visible device; use XLA_FLAGS=--xla_force_host_platform_device_count=N
+    (set before first jax import) to fake an N-device mesh on CPU."""
+    return jax.make_mesh((data or len(jax.devices()),), ("data",))

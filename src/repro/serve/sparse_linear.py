@@ -24,7 +24,8 @@ from repro.core import (AlphaSparseSearch, SearchConfig, SparseMatrix,
 from repro.core.graph import OperatorGraph
 from repro.core.operators import OpSpec
 
-__all__ = ["SparseLinear", "sparsify_linear", "prune_magnitude"]
+__all__ = ["SparseLinear", "sparsify_linear", "sparsify_linear_sharded",
+           "prune_magnitude"]
 
 
 def prune_magnitude(w: np.ndarray, density: float) -> SparseMatrix:
@@ -49,8 +50,8 @@ class SparseLinear:
 
     def __call__(self, x: jax.Array) -> jax.Array:
         """x: (n_cols,) or (B, n_cols) -> (n_rows,) or (B, n_rows)."""
-        if x.ndim == 1:
-            return self.program(x)
+        if x.ndim == 1 or hasattr(self.program, "shards"):
+            return self.program(x)   # sharded programs batch internally
         return jax.vmap(lambda xi: self.program(xi))(x)
 
     @property
@@ -81,3 +82,25 @@ def sparsify_linear(w: np.ndarray, density: float = 0.1,
                             res.gflops)
     meta = run_graph(m, _DEFAULT_GRAPH)
     return SparseLinear(m, _DEFAULT_GRAPH, build_spmv(meta))
+
+
+def sparsify_linear_sharded(w: np.ndarray, mesh, density: float = 0.1,
+                            do_search: bool = False,
+                            dist_config=None) -> SparseLinear:
+    """Sharded variant: the pruned weight is row-partitioned over the
+    mesh's ``data`` axis and each shard gets its own design (heuristic by
+    default; ``do_search=True`` runs one AlphaSparse search per shard).
+
+    The returned layer's program is a ``ShardedSpmvProgram`` — one SPMD
+    shard_map program whose per-device branch runs that shard's kernel.
+    """
+    from repro.dist.search import ShardedSearchConfig, dist_search
+    from repro.dist.spmv import shard_map_spmv
+
+    m = prune_magnitude(np.asarray(w), density)
+    cfg = dist_config or ShardedSearchConfig()
+    if do_search:
+        return SparseLinear(m, None, dist_search(m, mesh, cfg).program)
+    return SparseLinear(m, None, shard_map_spmv(
+        m, mesh, axis_name=cfg.axis_name, mode=cfg.mode,
+        balance=cfg.balance, backend=cfg.backend))

@@ -1,0 +1,235 @@
+"""Sharded-SpMV subsystem (repro.dist): partitioning, per-shard design,
+shard_map execution vs. the float64 dense oracle.
+
+1-device-mesh tests run in-process; the real 8-fake-device mesh needs
+XLA_FLAGS set before jax initialises, so it runs in a subprocess (same
+pattern as test_dryrun.py).
+"""
+import json
+import os
+import subprocess
+import sys
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.matrices import SparseMatrix, powerlaw_matrix
+from repro.dist.spmv import partition_matrix
+
+
+# ------------------------- partitioning (no mesh) ---------------------------
+
+def _rebuild(shards, m, mode):
+    """Reassemble the global triplets from shard-local index space."""
+    rows, cols, vals = [], [], []
+    for s in shards:
+        if mode == "row":
+            rows.append(s.matrix.rows + s.start)
+            cols.append(s.matrix.cols)
+        else:
+            rows.append(s.matrix.rows)
+            cols.append(s.matrix.cols + s.start)
+        vals.append(s.matrix.vals)
+    return SparseMatrix(m.n_rows, m.n_cols,
+                        np.concatenate(rows).astype(np.int32),
+                        np.concatenate(cols).astype(np.int32),
+                        np.concatenate(vals).astype(np.float32)).canonical()
+
+
+@pytest.mark.parametrize("mode", ["row", "col"])
+@pytest.mark.parametrize("n_shards", [1, 3, 8])
+def test_partition_is_exact_cover(mode, n_shards):
+    m = powerlaw_matrix(200, 180, 5.0, 1.0, seed=3)
+    shards = partition_matrix(m, n_shards, mode=mode)
+    assert len(shards) == n_shards
+    assert sum(s.matrix.nnz for s in shards) == m.nnz
+    got = _rebuild(shards, m, mode)
+    assert np.array_equal(got.rows, m.rows)
+    assert np.array_equal(got.cols, m.cols)
+    np.testing.assert_allclose(got.vals, m.vals)
+
+
+def test_partition_nnz_balance_on_powerlaw():
+    """nnz balancing must beat row balancing on a skewed matrix."""
+    m = powerlaw_matrix(600, 400, 8.0, 0.7, seed=4)
+    assert m.is_irregular()
+    by_nnz = partition_matrix(m, 8, balance="nnz")
+    by_rows = partition_matrix(m, 8, balance="rows")
+    imb = lambda sh: max(s.matrix.nnz for s in sh) / (m.nnz / len(sh))
+    assert imb(by_nnz) <= imb(by_rows) + 1e-9
+    assert imb(by_nnz) < 2.0    # no shard holds >2x its fair share
+
+
+def test_col_partition_degenerate_trailing_shards():
+    """n_shards * width > n_cols: trailing shards clamp to zero width and
+    bounds still tile [0, n_cols) exactly."""
+    m = powerlaw_matrix(60, 10, 3.0, 1.0, seed=6)
+    shards = partition_matrix(m, 8, mode="col")
+    assert shards[-1].stop == m.n_cols
+    assert sum(s.matrix.n_cols for s in shards) == m.n_cols
+    assert all(s.stop >= s.start for s in shards)
+    assert sum(s.matrix.nnz for s in shards) == m.nnz
+
+
+def test_partition_handles_empty_shards():
+    """More shards than populated rows -> empty shards, no crash."""
+    rows = np.array([0, 0, 1], np.int32)
+    cols = np.array([0, 2, 1], np.int32)
+    vals = np.ones(3, np.float32)
+    m = SparseMatrix(64, 8, rows, cols, vals)
+    shards = partition_matrix(m, 8, balance="rows")
+    assert sum(s.is_empty for s in shards) >= 6
+    assert sum(s.matrix.nnz for s in shards) == 3
+    # boundaries are monotone and tile [0, n_rows)
+    assert shards[0].start == 0 and shards[-1].stop == 64
+    for a, b in zip(shards, shards[1:]):
+        assert a.stop == b.start
+
+
+# -------------------- execution on a 1-device mesh --------------------------
+
+def _data_mesh1():
+    import jax
+    return jax.make_mesh((1,), ("data",))
+
+
+@pytest.mark.parametrize("mode", ["row", "col"])
+def test_shard_map_spmv_matches_oracle_1dev(mode, small_irregular):
+    from repro.dist.spmv import shard_map_spmv
+    m = small_irregular
+    prog = shard_map_spmv(m, _data_mesh1(), mode=mode)
+    x = np.random.default_rng(0).standard_normal(m.n_cols).astype(np.float32)
+    oracle = m.spmv_dense_oracle(x)
+    y = np.asarray(prog(x))
+    scale = np.abs(oracle).max() + 1e-30
+    np.testing.assert_allclose(y, oracle, atol=1e-4 * scale, rtol=0)
+    assert prog.nnz == m.nnz
+
+
+def test_shard_map_spmv_empty_matrix_1dev():
+    from repro.dist.spmv import shard_map_spmv
+    m = SparseMatrix(16, 8, np.zeros(0, np.int32), np.zeros(0, np.int32),
+                     np.zeros(0, np.float32))
+    prog = shard_map_spmv(m, _data_mesh1())
+    y = np.asarray(prog(np.ones(8, np.float32)))
+    assert y.shape == (16,)
+    assert np.all(y == 0.0)
+
+
+def test_sharded_program_batched_matches_dense():
+    from repro.serve.sparse_linear import sparsify_linear_sharded
+    rng = np.random.default_rng(5)
+    w = rng.standard_normal((96, 80)).astype(np.float32)
+    sl = sparsify_linear_sharded(w, _data_mesh1(), density=0.15)
+    X = rng.standard_normal((3, 80)).astype(np.float32)
+    Y = np.asarray(sl(X))
+    want = X @ sl.matrix.to_dense().T.astype(np.float32)
+    np.testing.assert_allclose(Y, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------- per-shard search ---------------------------------
+
+def _tiny_search_cfg():
+    from repro.core.search import SearchConfig
+    from repro.dist.search import ShardedSearchConfig
+    return ShardedSearchConfig(
+        search=SearchConfig(max_seconds=20, max_structures=2,
+                            coarse_samples=2, fine_eval_budget=0,
+                            timing_repeats=1, use_cost_model=False, seed=7),
+        min_nnz_for_search=1)
+
+
+def test_dist_search_deterministic_under_fixed_seed(small_uniform):
+    from repro.dist.search import dist_search
+    mesh = _data_mesh1()
+    runs = []
+    for _ in range(2):
+        res = dist_search(small_uniform, mesh, _tiny_search_cfg())
+        labels = [tuple(r.structure for r in rep.result.records)
+                  for rep in res.reports if rep.result is not None]
+        runs.append(labels)
+    assert runs[0] == runs[1]          # same explored structure sequence
+
+
+def test_dist_search_program_correct(small_uniform):
+    from repro.dist.search import dist_search
+    res = dist_search(small_uniform, _data_mesh1(), _tiny_search_cfg())
+    m = small_uniform
+    x = np.random.default_rng(1).standard_normal(m.n_cols).astype(np.float32)
+    oracle = m.spmv_dense_oracle(x)
+    y = np.asarray(res.program(x))
+    scale = np.abs(oracle).max() + 1e-30
+    np.testing.assert_allclose(y, oracle, atol=1e-4 * scale, rtol=0)
+    assert all(rep.searched for rep in res.reports if not rep.shard.is_empty)
+
+
+def test_search_survives_wrong_program(small_uniform):
+    """Satellite check: a wrong generated program is a failed candidate
+    (warned, memoised inf), not an uncaught AssertionError."""
+    from repro.core.search import AlphaSparseSearch, SearchConfig
+    s = AlphaSparseSearch(small_uniform,
+                          SearchConfig(max_seconds=5, max_structures=1,
+                                       coarse_samples=1, timing_repeats=1,
+                                       use_cost_model=False))
+    s._oracle = s._oracle + 1e6        # force every correctness check to fail
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        with pytest.raises(RuntimeError, match="no valid program"):
+            s.run()
+    assert any("WRONG" in str(w.message) for w in caught)
+    assert all(v == np.inf for v in s._memo.values())
+
+
+# --------------------- real 8-fake-device mesh (subprocess) ------------------
+
+SCRIPT_8DEV = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+from repro.core.matrices import SparseMatrix, banded_matrix, powerlaw_matrix
+from repro.dist.spmv import shard_map_spmv
+
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((8,), ("data",))
+out = {}
+cases = {
+    "regular": banded_matrix(320, 3, seed=1),
+    "powerlaw": powerlaw_matrix(400, 350, 6.0, 1.0, seed=2),
+    # nearly-empty: most of the 8 row shards hold zero nnz
+    "sparse_rows": SparseMatrix(
+        64, 32, np.array([0, 0, 1], np.int32), np.array([0, 5, 9], np.int32),
+        np.ones(3, np.float32)),
+    # n_cols < n_shards * width: degenerate trailing col shards
+    "narrow": powerlaw_matrix(60, 10, 3.0, 1.0, seed=6),
+}
+for name, m in cases.items():
+    x = np.random.default_rng(0).standard_normal(m.n_cols).astype(np.float32)
+    oracle = m.spmv_dense_oracle(x)
+    scale = float(np.abs(oracle).max()) + 1e-30
+    rec = {}
+    for mode in ("row", "col"):
+        prog = shard_map_spmv(m, mesh, mode=mode,
+                              balance="rows" if name == "sparse_rows"
+                              else "nnz")
+        y = np.asarray(prog(x))
+        rec[mode] = float(np.abs(y - oracle).max() / scale)
+    out[name] = rec
+print(json.dumps(out))
+"""
+
+
+def test_shard_map_spmv_8_fake_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).parent.parent / "src")
+    res = subprocess.run([sys.executable, "-c", SCRIPT_8DEV],
+                         capture_output=True, text=True, env=env,
+                         timeout=420)
+    assert res.returncode == 0, res.stderr[-2000:]
+    errs = json.loads(res.stdout.strip().splitlines()[-1])
+    for name, rec in errs.items():
+        for mode, rel_err in rec.items():
+            assert rel_err < 1e-4, (name, mode, rel_err)

@@ -27,6 +27,8 @@ cell = ShapeCell("tiny_train", 32, 8, "train")
 lowered = lower_cell(cfg, cell, mesh)
 compiled = lowered.compile()
 ca = compiled.cost_analysis()
+if isinstance(ca, list):   # some jax versions return [dict]
+    ca = ca[0] if ca else {}
 stats = collective_stats(compiled.as_text(), body_trip=n_blocks(cfg))
 print(json.dumps({
     "flops": float(ca.get("flops", 0.0)),
@@ -63,6 +65,7 @@ def _run(script, arch):
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["granite-3-2b", "jamba-v0.1-52b",
                                   "deepseek-moe-16b"])
 def test_train_cell_lowers_on_multipod_mesh(arch):
@@ -72,6 +75,7 @@ def test_train_cell_lowers_on_multipod_mesh(arch):
     assert rec["collectives"]["total_bytes"] > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["mamba2-1.3b", "qwen3-8b"])
 def test_decode_cell_lowers(arch):
     rec = _run(DECODE_SCRIPT, arch)

@@ -17,6 +17,7 @@ def _rand_ell(rng, t, r, w, dtype, n_cols):
     return vals, cols
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("t,r,w", [(1, 8, 4), (3, 8, 16), (5, 16, 1),
                                    (2, 32, 33), (7, 8, 128)])
 @pytest.mark.parametrize("dtype", [np.float32])
@@ -67,6 +68,7 @@ def _rand_seg(rng, t, s, l, m, n_cols):
             local.astype(np.int32).reshape(shape3), seg_end)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("mode", ["seg_scan", "onehot_mxu"])
 @pytest.mark.parametrize("t,s,l,m", [(1, 2, 8, 8), (3, 4, 16, 16),
                                      (2, 8, 8, 24)])

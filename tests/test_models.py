@@ -25,7 +25,16 @@ def _batch(cfg, b=2, s=16, seed=0):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# the jamba pattern block is 8 layers -> by far the heaviest CPU compiles
+_SLOW_ARCHS = {"jamba-v0.1-52b"}
+
+
+def _arch_params(ids):
+    return [pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS
+            else a for a in ids]
+
+
+@pytest.mark.parametrize("arch", _arch_params(ARCH_IDS))
 def test_arch_smoke_train_step(arch):
     cfg = get_config(arch).reduced()
     params = init_params(cfg, KEY)
@@ -62,8 +71,8 @@ def test_arch_smoke_decode_step(arch):
     assert jax.tree.structure(caches2) == jax.tree.structure(caches)
 
 
-@pytest.mark.parametrize("arch", ["granite-3-2b", "mamba2-1.3b",
-                                  "jamba-v0.1-52b"])
+@pytest.mark.parametrize("arch", _arch_params(["granite-3-2b", "mamba2-1.3b",
+                                               "jamba-v0.1-52b"]))
 def test_decode_matches_forward(arch):
     """Stepwise decode must reproduce the train-path logits (KV-cache /
     SSM-state correctness), covering attention, SSD and the hybrid mix."""
@@ -126,6 +135,7 @@ def test_blockwise_attention_matches_full():
                                rtol=2e-3, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_sliding_window_decode_ring_buffer():
     """Window attention: ring-buffer decode == full-cache decode restricted
     to the window."""

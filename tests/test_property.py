@@ -5,6 +5,12 @@ SpMV"): EVERY valid Operator Graph applied to ANY matrix must produce a
 program whose output matches the float64 dense oracle.
 """
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test extra (pip install 'repro[test]'): property tests "
+           "need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.compress import affine_rowmap, fit_array

@@ -57,6 +57,7 @@ def test_search_result_fields(small_uniform):
     assert len(res.records) >= 1
 
 
+@pytest.mark.slow
 def test_cost_model_level3_runs(small_irregular):
     cfg = dataclasses.replace(CFG, max_structures=8, coarse_samples=4,
                               max_seconds=30)
@@ -65,6 +66,7 @@ def test_cost_model_level3_runs(small_irregular):
         assert res.cost_model_mad < 1.0   # sub-100% MAD on train set
 
 
+@pytest.mark.slow
 def test_search_deterministic_structure_selection(small_uniform):
     r1 = search(small_uniform, CFG)
     r2 = search(small_uniform, CFG)

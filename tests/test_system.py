@@ -15,6 +15,7 @@ QUICK = SearchConfig(max_seconds=25, max_structures=8, coarse_samples=4,
                      fine_eval_budget=4, timing_repeats=2, seed=0)
 
 
+@pytest.mark.slow
 def test_search_end_to_end_irregular(small_irregular):
     res = search(small_irregular, QUICK)
     assert res.best_seconds < np.inf
@@ -35,6 +36,7 @@ def test_search_regular_finds_compressed_format(small_regular):
                for r in res.records)
 
 
+@pytest.mark.slow
 def test_search_beats_single_worst_format(small_irregular):
     """Weak form of the paper's Fig. 9 claim at CI scale: the searched
     program must beat the WORST artificial format (ELL on irregular data
@@ -52,6 +54,7 @@ def test_search_beats_single_worst_format(small_irregular):
     assert res.best_seconds < t_ell * 1.5
 
 
+@pytest.mark.slow
 def test_memoization_no_duplicate_evals(small_uniform):
     from repro.core.search import AlphaSparseSearch
     s = AlphaSparseSearch(small_uniform, QUICK)
@@ -66,6 +69,7 @@ def test_pfs_selects_measured_best(small_irregular):
     assert len(res.all_seconds) == 8
 
 
+@pytest.mark.slow
 def test_search_respects_time_budget(small_uniform):
     import time
     cfg = SearchConfig(max_seconds=6, max_structures=50, coarse_samples=8,
@@ -82,6 +86,7 @@ def test_suite_spans_regularity_axis():
     assert any(v > 100 for v in variances.values())   # irregular present
 
 
+@pytest.mark.slow
 def test_hyb_pattern_matrix_is_hyb_friendly():
     """The paper's §VII-H limitation case: HYB wins GL7d19-like patterns.
     Our BIN operator covers it — search must stay within 3x of HYB."""
