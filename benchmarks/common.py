@@ -4,8 +4,6 @@ from __future__ import annotations
 import os
 import time
 
-import numpy as np
-
 from repro.core.matrices import make_suite
 from repro.core.search import SearchConfig
 
@@ -27,17 +25,26 @@ def search_budget() -> SearchConfig:
                         timing_repeats=3, seed=0)
 
 
-_SEARCH_CACHE: dict = {}
+_PROGRAM_CACHE = None
 
 
-def cached_search(name: str, m):
+def program_cache():
+    """Process-wide ``ProgramCache``. Set ``REPRO_PROGRAM_CACHE=<dir>`` to
+    persist winning designs as npz across benchmark *reruns* (a disk hit
+    rebuilds the program from the stored graph instead of re-searching)."""
+    global _PROGRAM_CACHE
+    if _PROGRAM_CACHE is None:
+        from repro.core.search import ProgramCache
+        _PROGRAM_CACHE = ProgramCache(os.environ.get("REPRO_PROGRAM_CACHE"))
+    return _PROGRAM_CACHE
+
+
+def cached_search(m):
     """Search results are deterministic per (matrix, budget); fig9/10/12/
-    creativity share one search per matrix via this cache."""
-    key = (name, SCALE)
-    if key not in _SEARCH_CACHE:
-        from repro.core.search import search
-        _SEARCH_CACHE[key] = search(m, search_budget())
-    return _SEARCH_CACHE[key]
+    creativity share one search per matrix via the program cache (keyed on
+    the matrix fingerprint, so identical matrices coalesce)."""
+    from repro.core.search import search
+    return search(m, search_budget(), cache=program_cache())
 
 
 def time_call(fn, *args, repeats: int = 5, warmup: int = 2) -> float:

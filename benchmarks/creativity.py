@@ -14,7 +14,7 @@ def run() -> dict:
     suite = bench_suite()
     machine, branched = [], []
     for name, m in suite.items():
-        res = cached_search(name, m)
+        res = cached_search(m)
         machine.append(res.is_machine_designed())
         branched.append(res.best_graph.has_branches())
         emit(f"creativity.{name}", res.best_seconds * 1e6,

@@ -21,7 +21,7 @@ def run() -> dict:
         x = np.random.default_rng(0).standard_normal(m.n_cols).astype(
             np.float32)
         sel = pfs.select(m, x)
-        res = cached_search(name, m)
+        res = cached_search(m)
         t_alpha = time_call(res.best_program, x, repeats=3)
         t_pfs = time_call(sel.best_format, x, repeats=3)
         speedup = t_pfs / t_alpha

@@ -46,7 +46,7 @@ def run() -> dict:
             np.float32)
         naive = build_naive_rowloop(m)
         t_naive = time_call(naive, x, repeats=2, warmup=1)
-        res = cached_search(name, m)
+        res = cached_search(m)
         t_alpha = time_call(res.best_program, x, repeats=3)
         speedups.append(t_naive / t_alpha)
         emit(f"fig12.{name}", t_alpha * 1e6,

@@ -24,7 +24,7 @@ def run() -> dict:
     for name, m in suite.items():
         x = np.random.default_rng(0).standard_normal(m.n_cols).astype(
             np.float32)
-        res = cached_search(name, m)
+        res = cached_search(m)
         t_alpha = time_call(res.best_program, x, repeats=3)
         row = {"alpha": gflops(m.nnz, t_alpha)}
         for f in FORMATS:

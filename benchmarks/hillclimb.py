@@ -24,7 +24,6 @@ Run: REPRO_DRYRUN_DEVICES=512 PYTHONPATH=src python -m benchmarks.hillclimb
 (must be a fresh process: forces 512 host devices).
 """
 import os
-import sys
 
 if __name__ == "__main__":
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"

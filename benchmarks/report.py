@@ -11,9 +11,7 @@ import json
 from collections import Counter
 from pathlib import Path
 
-from repro.configs import REGISTRY, cells_for
-
-from . import perfmodel, roofline
+from . import roofline
 
 OUT = Path("results/report")
 

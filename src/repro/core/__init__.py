@@ -5,4 +5,5 @@ from .metadata import MetadataSet, from_matrix  # noqa: F401
 from .operators import OPERATORS, OpSpec  # noqa: F401
 from .graph import OperatorGraph, GraphError, run_graph  # noqa: F401
 from .kernel_builder import SpmvProgram, build_spmv  # noqa: F401
-from .search import AlphaSparseSearch, SearchConfig, SearchResult, search  # noqa: F401
+from .search import (AlphaSparseSearch, ProgramCache, SearchConfig,  # noqa: F401
+                     SearchResult, search)

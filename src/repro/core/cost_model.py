@@ -133,30 +133,55 @@ FEATURE_NAMES = [
     "pad_ratio", "bytes_per_nnz", "n_blocks", "n_buckets", "tile_rows",
     "mean_width", "chunk", "seg_rows", "red_lane", "red_seg", "red_onehot",
     "red_atom", "comb_grid_acc", "sorted_any", "binned", "coldiv",
+    # multi-RHS (SpMM) terms: when the program serves B right-hand sides,
+    # format traffic is amortised 1/B over the output flops and the
+    # irregular reductions become MXU contractions — the model needs both
+    # to rank designs differently at different batch sizes.
+    "batch_size", "bytes_per_out_flop", "mxu_mac_ratio",
 ]
 
 _REDUCE_ONE_HOT = {"lane_total": (1, 0, 0, 0), "seg_scan": (0, 1, 0, 0),
                    "onehot_mxu": (0, 0, 1, 0), "gmem_atom": (0, 0, 0, 1)}
 
 
-def program_features(meta, program) -> np.ndarray:
-    """Structural feature vector for the cost model (no execution needed)."""
+def program_features(meta, program, batch_size: int = 1) -> np.ndarray:
+    """Structural feature vector for the cost model (no execution needed).
+
+    ``batch_size`` is the number of right-hand sides the program will serve
+    (1 = classic SpMV). It enters through three terms:
+
+    * ``batch_size`` itself;
+    * ``bytes_per_out_flop`` — stored format bytes over useful output
+      flops ``2*nnz*B``: streaming the format once for B columns amortises
+      its traffic 1/B, which is the whole point of the fused SpMM path;
+    * ``mxu_mac_ratio`` — MACs routed through the MXU per useful flop.
+      ELL reductions only hit the MXU when batched (the (R,W)x(W,B)
+      contraction); ONEHOT_MXU_RED always does (C*M one-hot MACs, times B
+      when batched). High ratios mean compute-bound-on-MXU designs whose
+      relative cost *drops* as B grows.
+    """
     from .metadata import EllTileLayout, SegTileLayout  # local import (cycle)
 
     nnz = max(meta.nnz, 1)
+    bsz = max(int(batch_size), 1)
     lengths = np.concatenate([b.row_lengths() for b in meta.blocks])
     row_var = float(np.var(lengths)) if lengths.size else 0.0
     n_buckets, tile_rows, widths, chunk, seg_rows = 0, [], [], 0, 0
     red = np.zeros(4)
     comb_acc = 0
+    mxu_macs = 0.0
     for b in meta.blocks:
         if isinstance(b.layout, EllTileLayout):
             n_buckets += len(b.layout.buckets)
             tile_rows.append(b.layout.tile_rows)
             widths.extend(bk.width for bk in b.layout.buckets)
+            if bsz > 1:   # batched ELL contracts padded slots on the MXU
+                mxu_macs += sum(bk.vals.size for bk in b.layout.buckets) * bsz
         elif isinstance(b.layout, SegTileLayout):
             chunk = max(chunk, int(np.prod(b.layout.vals.shape[1:])))
             seg_rows = max(seg_rows, b.layout.seg_rows)
+            if b.reduce is not None and b.reduce.kind == "onehot_mxu":
+                mxu_macs += b.layout.vals.size * b.layout.seg_rows * bsz
         if b.reduce is not None:
             red = red + np.array(_REDUCE_ONE_HOT[b.reduce.kind])
             comb_acc += int(b.reduce.combine == "grid_acc")
@@ -173,4 +198,7 @@ def program_features(meta, program) -> np.ndarray:
         float(chunk), float(seg_rows),
         *(red > 0).astype(float), float(comb_acc > 0),
         float("SORT" in hist), float("BIN" in hist), float("COL_DIV" in hist),
+        float(bsz),
+        program.stored_bytes / (2.0 * nnz * bsz),
+        mxu_macs / (2.0 * nnz * bsz),
     ], dtype=np.float64)

@@ -12,12 +12,11 @@ Graphs are hashable value objects: the search engine memoises on them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 from .metadata import MetadataSet, from_matrix
 from .matrices import SparseMatrix
 from .operators import (OPERATORS, STAGE_CONVERTING, STAGE_IMPLEMENTING,
-                        STAGE_MAPPING, OpSpec, apply_op)
+                        OpSpec, apply_op)
 
 __all__ = ["OperatorGraph", "GraphError", "run_graph"]
 

@@ -11,6 +11,12 @@ Two backends share one plan:
   * ``jax``    — pure-jnp program (the oracle; also what we time on CPU).
   * ``pallas`` — the TPU kernels in ``repro.kernels`` (interpret=True on CPU).
 
+Generated programs are multi-RHS aware: calling a program with a 2-D x of
+shape (n_cols, B) dispatches to the fused SpMM kernel variants (format
+arrays stream once for all B right-hand sides) and returns (n_rows, B);
+a 1-D x takes the classic SpMV path. The dispatch happens at trace time
+(``x.ndim`` is static), so both ranks jit-compile independently.
+
 Model-Driven Format Compression (``compress.py``) runs here: fitted arrays
 are elided from the stored format and recomputed in-kernel; an affine rowmap
 upgrades the combine to GRID_ACC (direct output writes, no scatter).
@@ -18,8 +24,7 @@ upgrades the combine to GRID_ACC (direct output writes, no scatter).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +38,16 @@ __all__ = ["SpmvProgram", "build_spmv"]
 
 @dataclasses.dataclass
 class SpmvProgram:
-    """A generated SpMV program: format arrays + jitted kernel + report."""
+    """A generated SpMV/SpMM program: format arrays + jitted kernel + report.
+
+    ``__call__`` dispatches on ``x.ndim``: a (n_cols,) vector runs the
+    1-RHS SpMV kernels, a (n_cols, B) tile runs the fused multi-RHS SpMM
+    variants (one format stream for all B columns) and yields (n_rows, B).
+    """
+
+    # explicit batching protocol (see serve.sparse_linear): callers check
+    # this instead of duck-typing on program internals
+    supports_batch = True
 
     n_rows: int
     n_cols: int
@@ -101,15 +115,15 @@ def _plan_ell_block(bi: int, block: Block, n_rows: int, fmt: dict,
             nv = int((bucket.rowmap.ravel() >= 0).sum())
             rep["combine"] = "grid_acc" if want_direct else "scatter(affine)"
             rep["rowmap"] = "elided(linear)"
+            # combine closures receive the partial pre-flattened to a
+            # (slab_rows,) or (slab_rows, B) slab — rank-agnostic adds
             if want_direct:
-                def combine_fn(y, partial, b0=b0, nv=nv):
-                    flat = partial.reshape(-1)[:nv]
-                    return y.at[b0:b0 + nv].add(flat)
+                def combine_fn(y, flat, b0=b0, nv=nv):
+                    return y.at[b0:b0 + nv].add(flat[:nv])
             else:
-                def combine_fn(y, partial, b0=b0, nv=nv):
-                    flat = partial.reshape(-1)[:nv]
+                def combine_fn(y, flat, b0=b0, nv=nv):
                     idx = b0 + jnp.arange(nv, dtype=jnp.int32)
-                    return y.at[idx].add(flat)
+                    return y.at[idx].add(flat[:nv])
             rowmap_key = None
         else:
             if want_direct:
@@ -189,7 +203,10 @@ def build_spmv(meta: MetadataSet, backend: str = "jax",
         from repro.kernels import ops as kops  # lazy: keeps core importable
 
     def run(fmt, x):
-        y = jnp.zeros((n_rows,), dtype=jnp.float32)
+        # trace-time dispatch: 1-D x -> SpMV kernels, (n_cols, B) -> fused
+        # SpMM variants. ``rhs`` is () or (B,), appended to output shapes.
+        rhs = x.shape[1:]
+        y = jnp.zeros((n_rows,) + rhs, dtype=jnp.float32)
         for plan in plans:
             if plan[0] == "ell":
                 _, key, cols_ref, combine_fn, rep = plan
@@ -199,19 +216,22 @@ def build_spmv(meta: MetadataSet, backend: str = "jax",
                 if backend == "pallas":
                     if rep["combine"] == "grid_acc":
                         # direct-write kernel: output slab, no scatter
-                        partial = kops.ell_spmv_direct(vals, cols, x,
-                                                       interpret=interpret)
+                        op = kops.ell_spmm_direct if rhs else kops.ell_spmv_direct
+                        partial = op(vals, cols, x, interpret=interpret)
                     else:
-                        partial = kops.ell_spmv(vals, cols, x,
-                                                interpret=interpret)
+                        op = kops.ell_spmm if rhs else kops.ell_spmv
+                        partial = op(vals, cols, x, interpret=interpret)
+                elif rhs:
+                    partial = jnp.einsum("trw,trwb->trb", vals, x[cols])
                 else:
                     partial = jnp.einsum("trw,trw->tr", vals, x[cols])
+                flat = partial.reshape((-1,) + rhs)
                 if isinstance(combine_fn, tuple):  # rowmap scatter
                     rm = fmt[combine_fn[1]].reshape(-1)
                     safe = jnp.where(rm >= 0, rm, n_rows)
-                    y = y.at[safe].add(partial.reshape(-1), mode="drop")
+                    y = y.at[safe].add(flat, mode="drop")
                 else:
-                    y = combine_fn(y, partial)
+                    y = combine_fn(y, flat)
             else:
                 _, key, cols_ref, kind, seg_rows, rep = plan
                 vals = fmt[f"{key}_vals"]
@@ -224,7 +244,10 @@ def build_spmv(meta: MetadataSet, backend: str = "jax",
                     # GMEM_ATOM_RED: one global reduction of the product
                     # stream; rows stored directly in the format (padded
                     # entries carry val=0 and a valid row -> no masking).
-                    prod = (vals * x[cols]).reshape(-1)
+                    if rhs:
+                        prod = (vals[..., None] * x[cols]).reshape((-1,) + rhs)
+                    else:
+                        prod = (vals * x[cols]).reshape(-1)
                     rows = fmt[f"{key}_rows"].reshape(-1)
                     y = y + jax.ops.segment_sum(
                         prod, rows, num_segments=n_rows,
@@ -232,16 +255,17 @@ def build_spmv(meta: MetadataSet, backend: str = "jax",
                     continue
                 if backend == "pallas":
                     pk = "seg_scan" if kind == "gmem_atom" else kind
-                    partial = kops.seg_spmv(vals, cols, local, seg_end, x,
-                                            seg_rows, mode=pk,
-                                            interpret=interpret)
+                    op = kops.seg_spmm if rhs else kops.seg_spmv
+                    partial = op(vals, cols, local, seg_end, x,
+                                 seg_rows, mode=pk, interpret=interpret)
                 else:
                     from repro.kernels import ref as kref
-                    partial = kref.seg_spmv_ref(vals, cols, local, seg_end,
-                                                x, seg_rows, mode=kind)
+                    op = kref.seg_spmm_ref if rhs else kref.seg_spmv_ref
+                    partial = op(vals, cols, local, seg_end, x,
+                                 seg_rows, mode=kind)
                 rmf = rm.reshape(-1)
                 safe = jnp.where(rmf >= 0, rmf, n_rows)
-                y = y.at[safe].add(partial.reshape(-1), mode="drop")
+                y = y.at[safe].add(partial.reshape((-1,) + rhs), mode="drop")
         return y
 
     fn = jax.jit(run) if jit else run

@@ -9,8 +9,6 @@ Real ``.mtx`` files are also supported via :func:`read_matrix_market`.
 from __future__ import annotations
 
 import dataclasses
-import io
-from typing import Iterable
 
 import numpy as np
 
@@ -86,6 +84,14 @@ class SparseMatrix:
         """Reference y = A @ x in float64, the ground-truth oracle for every test."""
         y = np.zeros(self.n_rows, dtype=np.float64)
         np.add.at(y, self.rows, self.vals.astype(np.float64) * x[self.cols].astype(np.float64))
+        return y
+
+    def spmm_dense_oracle(self, x: np.ndarray) -> np.ndarray:
+        """Reference Y = A @ X in float64 for a multi-RHS tile X (n_cols, B)."""
+        y = np.zeros((self.n_rows, x.shape[1]), dtype=np.float64)
+        np.add.at(y, self.rows,
+                  self.vals.astype(np.float64)[:, None]
+                  * x[self.cols].astype(np.float64))
         return y
 
 

@@ -144,7 +144,17 @@ def default_shard_graph(m: SparseMatrix) -> OperatorGraph:
 
 @dataclasses.dataclass
 class ShardedSpmvProgram:
-    """A compiled sharded SpMV: y = A @ x across the mesh ``data`` axis."""
+    """A compiled sharded SpMV/SpMM: y = A @ x across the mesh ``data`` axis.
+
+    Multi-RHS: a 2-D x is an (n_cols, B) tile (same convention as
+    ``SpmvProgram``) and runs the per-shard *fused SpMM* kernels inside the
+    same shard_map — row mode concatenates (size, B) bands, col mode psums
+    (n_rows, B) partials exactly like the 1-RHS combine.
+    """
+
+    # explicit batching protocol shared with SpmvProgram (see
+    # serve.sparse_linear): 2-D x means (n_cols, B), not a vmapped batch
+    supports_batch = True
 
     n_rows: int
     n_cols: int
@@ -154,6 +164,7 @@ class ShardedSpmvProgram:
     mesh: object
     axis_name: str
     _fn: Callable = dataclasses.field(repr=False, default=None)
+    _fn_batched: Callable = dataclasses.field(repr=False, default=None)
 
     @property
     def nnz(self) -> int:
@@ -173,19 +184,17 @@ class ShardedSpmvProgram:
         return out
 
     def __call__(self, x) -> jax.Array:
+        """x: (n_cols,) -> (n_rows,), or (n_cols, B) -> (n_rows, B)."""
         x = jnp.asarray(x, jnp.float32)
-        if x.ndim == 2:
-            return jax.vmap(self._apply)(x)
-        return self._apply(x)
-
-    def _apply(self, x) -> jax.Array:
+        fn = self._fn_batched if x.ndim == 2 else self._fn
         if self.mode == "col":
             width = -(-self.n_cols // len(self.shards))
             pad = width * len(self.shards) - self.n_cols
-            return self._fn(jnp.pad(x, (0, pad)))
-        out = self._fn(x)  # (n_shards, R) padded row bands
+            return fn(jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)))
+        out = fn(x)  # (n_shards, R[, B]) padded row bands
         pieces = [out[i, : s.size] for i, s in enumerate(self.shards)]
-        return jnp.concatenate(pieces) if pieces else out[:, :0].reshape(-1)
+        return (jnp.concatenate(pieces) if pieces
+                else out[:, :0].reshape((-1,) + x.shape[1:]))
 
 
 def build_sharded_spmv(shards: Sequence[RowShard],
@@ -206,10 +215,13 @@ def build_sharded_spmv(shards: Sequence[RowShard],
 
         def branch(prog, size):
             def run(x):
+                # x: (n_cols,) or (n_cols, B); programs dispatch on ndim
+                rhs = x.shape[1:]
                 if prog is None:
-                    return jnp.zeros((1, R), jnp.float32)
+                    return jnp.zeros((1, R) + rhs, jnp.float32)
                 y = prog(x).astype(jnp.float32)
-                return jnp.pad(y, (0, R - size))[None]
+                pad = ((0, R - size),) + ((0, 0),) * len(rhs)
+                return jnp.pad(y, pad)[None]
             return run
 
         branches = [branch(p, s.size) for p, s in zip(programs, shards)]
@@ -217,17 +229,20 @@ def build_sharded_spmv(shards: Sequence[RowShard],
         def body(x):
             return jax.lax.switch(jax.lax.axis_index(axis_name), branches, x)
 
-        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=P(None),
-                               out_specs=P(axis_name, None), check_rep=False))
+        def make_fn(batched):
+            extra = (None,) if batched else ()
+            return jax.jit(shard_map(
+                body, mesh=mesh, in_specs=P(None, *extra),
+                out_specs=P(axis_name, None, *extra), check_rep=False))
     else:
         n_rows = shards[0].matrix.n_rows if shards else 0
         n_cols = shards[-1].stop if shards else 0
-        width = -(-n_cols // n_shards) if n_shards else 0
 
         def branch(prog, w):
             def run(x_local):
+                rhs = x_local.shape[1:]
                 if prog is None:
-                    return jnp.zeros((n_rows,), jnp.float32)
+                    return jnp.zeros((n_rows,) + rhs, jnp.float32)
                 return prog(x_local[:w]).astype(jnp.float32)
             return run
 
@@ -237,14 +252,19 @@ def build_sharded_spmv(shards: Sequence[RowShard],
         def body(x_local):
             y = jax.lax.switch(jax.lax.axis_index(axis_name), branches,
                                x_local)
-            # the COL_DIV combine step: sum per-slice partial products
+            # the COL_DIV combine step: sum per-slice partial products —
+            # identical for (n_rows,) and (n_rows, B) partials
             return jax.lax.psum(y, axis_name)
 
-        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=P(axis_name),
-                               out_specs=P(None), check_rep=False))
+        def make_fn(batched):
+            extra = (None,) if batched else ()
+            return jax.jit(shard_map(
+                body, mesh=mesh, in_specs=P(axis_name, *extra),
+                out_specs=P(None, *extra), check_rep=False))
     return ShardedSpmvProgram(n_rows=n_rows, n_cols=n_cols, mode=mode,
                               shards=shards, programs=programs, mesh=mesh,
-                              axis_name=axis_name, _fn=fn)
+                              axis_name=axis_name, _fn=make_fn(False),
+                              _fn_batched=make_fn(True))
 
 
 def shard_map_spmv(m: SparseMatrix, mesh, axis_name: str = "data",

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: row-per-lane padded-tile SpMV (ELL / SELL family).
+"""Pallas TPU kernels: row-per-lane padded-tile SpMV/SpMM (ELL / SELL family).
 
 TPU mapping (DESIGN.md §2): one grid step = one tile (the paper's BMTB),
 the R tile rows land on sublanes (BMW), the W padded nnz slots land on
@@ -15,6 +15,13 @@ same output block across steps without races.
 Block shapes: vals/cols blocks are (1, R, W); choose R a multiple of 8
 (sublanes) and W a multiple of 128 (lanes) via TILE_ROW_BLOCK / LANE_PAD
 for full VREG utilisation — the search engine tunes exactly these.
+
+Multi-RHS (SpMM) variants: x arrives as an (n_cols, B) tile — column b is
+the b-th right-hand side. The format arrays stream through VMEM exactly
+once for all B columns (1/B traffic amortisation vs. vmapping the 1-RHS
+kernel), the gather widens to (R, W, B), and the per-row reduction becomes
+a batched (R,W)x(R,W,B)->(R,B) ``dot_general`` contraction that the TPU
+routes through the MXU instead of the VPU.
 """
 from __future__ import annotations
 
@@ -24,7 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["ell_spmv_pallas", "ell_spmv_direct_pallas"]
+__all__ = ["ell_spmv_pallas", "ell_spmv_direct_pallas",
+           "ell_spmm_pallas", "ell_spmm_direct_pallas"]
 
 
 def _ell_kernel(x_ref, vals_ref, cols_ref, out_ref):
@@ -84,5 +92,72 @@ def ell_spmv_direct_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
         ],
         out_specs=pl.BlockSpec((R,), lambda t: (t,)),
         out_shape=jax.ShapeDtypeStruct((T * R,), vals.dtype),
+        interpret=interpret,
+    )(x, vals, cols)
+
+
+# ----------------------------- multi-RHS (SpMM) -----------------------------
+
+def _ell_spmm_contract(vals, cols, x):
+    """out[r, b] = sum_w vals[r, w] * x[cols[r, w], b].
+
+    One gather of the (n_cols, B) activation tile -> (R, W, B), then a
+    batched-over-R contraction of W against B on the MXU.
+    """
+    gathered = jnp.take(x, cols, axis=0)          # (R, W, B)
+    return jax.lax.dot_general(
+        vals, gathered, (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32).astype(vals.dtype)
+
+
+def _ell_spmm_kernel(x_ref, vals_ref, cols_ref, out_ref):
+    """One tile, all B right-hand sides: out (1, R, B)."""
+    out_ref[0] = _ell_spmm_contract(vals_ref[0], cols_ref[0], x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ell_spmm_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
+                    interpret: bool = True) -> jax.Array:
+    """vals, cols: (T, R, W); x: (n_cols, B) -> partials (T, R, B)."""
+    T, R, W = vals.shape
+    n_cols, B = x.shape
+    return pl.pallas_call(
+        _ell_spmm_kernel,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((n_cols, B), lambda t: (0, 0)),   # x: whole tile
+            pl.BlockSpec((1, R, W), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, R, W), lambda t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, R, B), lambda t: (t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, R, B), vals.dtype),
+        interpret=interpret,
+    )(x, vals, cols)
+
+
+def _ell_spmm_direct_kernel(x_ref, vals_ref, cols_ref, y_ref):
+    """GRID_ACC SpMM variant: write this tile's (R, B) output rows directly.
+
+    Same affine-rowmap precondition as the 1-RHS direct kernel.
+    """
+    y_ref[...] = _ell_spmm_contract(vals_ref[0], cols_ref[0], x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ell_spmm_direct_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
+                           interpret: bool = True) -> jax.Array:
+    """Direct-write SpMM variant -> (T*R, B) output slab (no scatter)."""
+    T, R, W = vals.shape
+    n_cols, B = x.shape
+    return pl.pallas_call(
+        _ell_spmm_direct_kernel,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((n_cols, B), lambda t: (0, 0)),
+            pl.BlockSpec((1, R, W), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, R, W), lambda t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((R, B), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((T * R, B), vals.dtype),
         interpret=interpret,
     )(x, vals, cols)

@@ -9,11 +9,12 @@ from __future__ import annotations
 
 import jax
 
-from .ell_spmv import ell_spmv_pallas, ell_spmv_direct_pallas
-from .seg_spmv import seg_spmv_pallas
-from . import ref
+from .ell_spmv import (ell_spmv_pallas, ell_spmv_direct_pallas,
+                       ell_spmm_pallas, ell_spmm_direct_pallas)
+from .seg_spmv import seg_spmv_pallas, seg_spmm_pallas
 
-__all__ = ["ell_spmv", "ell_spmv_direct", "seg_spmv"]
+__all__ = ["ell_spmv", "ell_spmv_direct", "seg_spmv",
+           "ell_spmm", "ell_spmm_direct", "seg_spmm"]
 
 
 def ell_spmv(vals, cols, x, *, interpret: bool = True) -> jax.Array:
@@ -30,4 +31,21 @@ def seg_spmv(vals, cols, local_row, seg_end, x, seg_rows: int,
              mode: str = "seg_scan", *, interpret: bool = True) -> jax.Array:
     """(T, S, L) nnz-split tiles -> (T, seg_rows) segment partials."""
     return seg_spmv_pallas(vals, cols, local_row, seg_end, x, seg_rows,
+                           mode=mode, interpret=interpret)
+
+
+def ell_spmm(vals, cols, x, *, interpret: bool = True) -> jax.Array:
+    """Fused multi-RHS: (T, R, W) tiles, x (n_cols, B) -> (T, R, B)."""
+    return ell_spmm_pallas(vals, cols, x, interpret=interpret)
+
+
+def ell_spmm_direct(vals, cols, x, *, interpret: bool = True) -> jax.Array:
+    """GRID_ACC SpMM variant -> (T*R, B) contiguous output slab."""
+    return ell_spmm_direct_pallas(vals, cols, x, interpret=interpret)
+
+
+def seg_spmm(vals, cols, local_row, seg_end, x, seg_rows: int,
+             mode: str = "seg_scan", *, interpret: bool = True) -> jax.Array:
+    """Fused multi-RHS: (T, S, L) tiles, x (n_cols, B) -> (T, seg_rows, B)."""
+    return seg_spmm_pallas(vals, cols, local_row, seg_end, x, seg_rows,
                            mode=mode, interpret=interpret)

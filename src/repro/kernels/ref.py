@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ell_spmv_ref", "ell_spmv_direct_ref", "seg_spmv_ref"]
+__all__ = ["ell_spmv_ref", "ell_spmv_direct_ref", "seg_spmv_ref",
+           "ell_spmm_ref", "ell_spmm_direct_ref", "seg_spmm_ref"]
 
 
 def ell_spmv_ref(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
@@ -52,4 +53,39 @@ def seg_spmv_ref(vals, cols, local_row, seg_end, x, seg_rows: int,
                   jnp.take_along_axis(cs, jnp.maximum(end - 1, 0), axis=1),
                   0.0)
     g_prev = jnp.concatenate([jnp.zeros((T, 1), g.dtype), g[:, :-1]], axis=1)
+    return g - g_prev
+
+
+# ----------------------------- multi-RHS (SpMM) -----------------------------
+
+def ell_spmm_ref(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
+    """Fused multi-RHS partials: vals, cols (T, R, W); x (n_cols, B)
+    -> (T, R, B). Column b of x is the b-th right-hand side."""
+    return jnp.einsum("trw,trwb->trb", vals, x[cols])
+
+
+def ell_spmm_direct_ref(vals, cols, x) -> jax.Array:
+    """GRID_ACC SpMM variant -> (T*R, B) contiguous output slab."""
+    out = ell_spmm_ref(vals, cols, x)
+    return out.reshape(-1, out.shape[-1])
+
+
+def seg_spmm_ref(vals, cols, local_row, seg_end, x, seg_rows: int,
+                 mode: str = "seg_scan") -> jax.Array:
+    """Fused multi-RHS seg partials: vals/cols/local_row (T, S, L);
+    x (n_cols, B) -> (T, M, B). Same two reduction modes as 1-RHS."""
+    T = vals.shape[0]
+    B = x.shape[1]
+    prod = (vals[..., None] * x[cols]).reshape(T, -1, B)      # (T, C, B)
+    if mode == "onehot_mxu":
+        onehot = jax.nn.one_hot(local_row.reshape(T, -1), seg_rows,
+                                dtype=vals.dtype)
+        return jnp.einsum("tcb,tcm->tmb", prod, onehot)
+    cs = jnp.cumsum(prod, axis=1)
+    end = seg_end.astype(jnp.int32)
+    g = jnp.where((end > 0)[..., None],
+                  jnp.take_along_axis(cs, jnp.maximum(end - 1, 0)[..., None],
+                                      axis=1), 0.0)
+    g_prev = jnp.concatenate([jnp.zeros((T, 1, B), g.dtype), g[:, :-1]],
+                             axis=1)
     return g - g_prev

@@ -18,6 +18,13 @@ Two in-tile reduction strategies (implementing-stage operators):
 
 Grid: one step per tile; partials (T, M) are scattered into y by the
 kernel builder (SCATTER_RED combine).
+
+Multi-RHS (SpMM) variants: x arrives as an (n_cols, B) tile, the flat
+product stream widens to (C, B), and both reductions run once for all B
+columns — ``seg_scan`` cumsums along the nnz axis with B lanes and gathers
+the same segment descriptor, ``onehot_mxu`` contracts the (C, B) products
+against the (C, M) one-hot in a single MXU matmul. The format arrays
+(vals/cols/descriptor) stream once instead of B times.
 """
 from __future__ import annotations
 
@@ -27,7 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["seg_spmv_pallas"]
+__all__ = ["seg_spmv_pallas", "seg_spmm_pallas"]
 
 
 def _seg_scan_kernel(x_ref, vals_ref, cols_ref, end_ref, out_ref):
@@ -81,6 +88,68 @@ def seg_spmv_pallas(vals: jax.Array, cols: jax.Array, local_row: jax.Array,
     elif mode == "onehot_mxu":
         return pl.pallas_call(
             _onehot_kernel,
+            grid=(T,),
+            in_specs=[x_spec, tile3, tile3, tile3],
+            out_specs=out_spec, out_shape=out_shape, interpret=interpret,
+        )(x, vals, cols, local_row)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+# ----------------------------- multi-RHS (SpMM) -----------------------------
+
+def _seg_scan_spmm_kernel(x_ref, vals_ref, cols_ref, end_ref, out_ref):
+    vals = vals_ref[0].reshape(-1)          # (C,)
+    cols = cols_ref[0].reshape(-1)
+    end = end_ref[0]                        # (M,)
+    x = x_ref[...]                          # (n_cols, B)
+    prod = vals[:, None] * jnp.take(x, cols, axis=0)     # (C, B)
+    cs = jnp.cumsum(prod, axis=0)           # scan along nnz, B lanes wide
+    g = jnp.where((end > 0)[:, None],
+                  jnp.take(cs, jnp.maximum(end - 1, 0), axis=0), 0.0)
+    g_prev = jnp.concatenate([jnp.zeros((1,) + g.shape[1:], g.dtype),
+                              g[:-1]], axis=0)
+    out_ref[0] = g - g_prev                 # (M, B)
+
+
+def _onehot_spmm_kernel(x_ref, vals_ref, cols_ref, local_ref, out_ref):
+    vals = vals_ref[0].reshape(-1)          # (C,)
+    cols = cols_ref[0].reshape(-1)
+    local = local_ref[0].reshape(-1)        # (C,)
+    x = x_ref[...]                          # (n_cols, B)
+    prod = vals[:, None] * jnp.take(x, cols, axis=0)     # (C, B)
+    m = out_ref.shape[1]
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, m), 1)).astype(vals.dtype)        # (C, M)
+    # one MXU matmul reduces all B columns at once: (M, C) x (C, B)
+    out_ref[0] = jax.lax.dot_general(
+        onehot, prod, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(vals.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("seg_rows", "mode", "interpret"))
+def seg_spmm_pallas(vals: jax.Array, cols: jax.Array, local_row: jax.Array,
+                    seg_end: jax.Array, x: jax.Array, seg_rows: int,
+                    mode: str = "seg_scan", interpret: bool = True
+                    ) -> jax.Array:
+    """vals/cols/local_row: (T, S, L); x: (n_cols, B) -> partials (T, M, B)."""
+    T, S, L = vals.shape
+    M = seg_rows
+    n_cols, B = x.shape
+    x_spec = pl.BlockSpec((n_cols, B), lambda t: (0, 0))
+    tile3 = pl.BlockSpec((1, S, L), lambda t: (t, 0, 0))
+    out_spec = pl.BlockSpec((1, M, B), lambda t: (t, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((T, M, B), vals.dtype)
+    if mode == "seg_scan":
+        return pl.pallas_call(
+            _seg_scan_spmm_kernel,
+            grid=(T,),
+            in_specs=[x_spec, tile3, tile3,
+                      pl.BlockSpec((1, M), lambda t: (t, 0))],
+            out_specs=out_spec, out_shape=out_shape, interpret=interpret,
+        )(x, vals, cols, seg_end)
+    elif mode == "onehot_mxu":
+        return pl.pallas_call(
+            _onehot_spmm_kernel,
             grid=(T,),
             in_specs=[x_spec, tile3, tile3, tile3],
             out_specs=out_spec, out_shape=out_shape, interpret=interpret,

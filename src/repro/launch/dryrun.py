@@ -33,7 +33,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import REGISTRY, get_config, cells_for
-from repro.configs.base import ArchConfig, ShapeCell, SHAPE_CELLS
+from repro.configs.base import ArchConfig, ShapeCell
 from repro.dist.sharding import (batch_specs, cache_specs, dp_axes,
                                  param_specs)
 from repro.models import (cache_spec, decode_step, init_params, n_blocks,

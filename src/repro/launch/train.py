@@ -20,13 +20,11 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticTokenPipeline
-from repro.dist.sharding import batch_specs, dp_axes, param_specs
+from repro.dist.sharding import batch_specs, param_specs
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.ft.manager import FaultToleranceManager, NodeFailure
 from repro.models import init_params

@@ -8,7 +8,6 @@ GSPMD re-shards around the (B,S,H,hd) reshape (DESIGN.md §6).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax

@@ -14,7 +14,6 @@ monomorphic.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import cache_spec, decode_step, init_params, prefill
+from repro.models import cache_spec, decode_step, init_params
 
 __all__ = ["ServeConfig", "ServingEngine"]
 

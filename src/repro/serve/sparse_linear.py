@@ -7,8 +7,14 @@ weight, runs the AlphaSparse search offline (the paper's "extremely
 optimized library generator" usage, §III), and returns a layer whose
 forward pass calls the machine-designed program.
 
-For batched decode (B small), the program is vmapped over the batch —
-each column of the activation batch is one SpMV x-vector.
+For batched decode (B small), the layer hands the whole activation batch
+to the program's fused multi-RHS (SpMM) path: the (B, n_cols) batch is
+transposed to the program's (n_cols, B) tile convention, the format
+arrays stream once for all B columns, and the result transposes back to
+(B, n_rows). Programs advertise this with ``supports_batch = True`` (an
+explicit protocol on both dense ``SpmvProgram`` and sharded
+``ShardedSpmvProgram``); unknown program types fall back to a vmap over
+the 1-RHS path.
 """
 from __future__ import annotations
 
@@ -16,10 +22,9 @@ import dataclasses
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (AlphaSparseSearch, SearchConfig, SparseMatrix,
+from repro.core import (ProgramCache, SearchConfig, SparseMatrix,
                         build_spmv, run_graph, search)
 from repro.core.graph import OperatorGraph
 from repro.core.operators import OpSpec
@@ -50,8 +55,11 @@ class SparseLinear:
 
     def __call__(self, x: jax.Array) -> jax.Array:
         """x: (n_cols,) or (B, n_cols) -> (n_rows,) or (B, n_rows)."""
-        if x.ndim == 1 or hasattr(self.program, "shards"):
-            return self.program(x)   # sharded programs batch internally
+        if x.ndim == 1:
+            return self.program(x)
+        if getattr(self.program, "supports_batch", False):
+            # fused multi-RHS: program convention is (n_cols, B) columns
+            return self.program(x.T).T
         return jax.vmap(lambda xi: self.program(xi))(x)
 
     @property
@@ -69,15 +77,21 @@ _DEFAULT_GRAPH = OperatorGraph.chain(
 
 def sparsify_linear(w: np.ndarray, density: float = 0.1,
                     search_config: Optional[SearchConfig] = None,
-                    do_search: bool = True) -> SparseLinear:
+                    do_search: bool = True,
+                    cache: Optional[ProgramCache] = None) -> SparseLinear:
     """Prune a dense weight and generate its SpMV program.
 
     do_search=False skips the (minutes-long) AlphaSparse search and uses a
-    sensible default graph — handy in tests; production path searches."""
+    sensible default graph — handy in tests; production path searches.
+    ``cache`` (a ``repro.core.ProgramCache``, optionally disk-backed) lets
+    serving restarts reuse a prior search for the same pruned weight; set
+    ``search_config.batch_size`` to the serving decode batch so the design
+    is tuned for the fused multi-RHS path."""
     m = prune_magnitude(np.asarray(w), density)
     if do_search:
         res = search(m, search_config or SearchConfig(max_seconds=30,
-                                                      max_structures=8))
+                                                      max_structures=8),
+                     cache=cache)
         return SparseLinear(m, res.best_graph, res.best_program,
                             res.gflops)
     meta = run_graph(m, _DEFAULT_GRAPH)

@@ -10,7 +10,6 @@ backward with the next forward load; the optimizer update happens once.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax

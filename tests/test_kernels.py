@@ -1,5 +1,4 @@
 """Pallas kernel sweeps: shapes x dtypes against the pure-jnp ref oracle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, REGISTRY, get_config, cells_for
 from repro.models import (cache_spec, decode_step, forward, init_params,
-                          loss_fn, padded_vocab, prefill)
+                          loss_fn, padded_vocab)
 
 KEY = jax.random.PRNGKey(0)
 

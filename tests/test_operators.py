@@ -5,7 +5,7 @@ import pytest
 from repro.core.graph import GraphError, OperatorGraph, run_graph
 from repro.core.matrices import powerlaw_matrix
 from repro.core.metadata import EllTileLayout, SegTileLayout, from_matrix
-from repro.core.operators import OPERATORS, OpSpec, apply_op
+from repro.core.operators import OpSpec, apply_op
 
 
 @pytest.fixture(scope="module")

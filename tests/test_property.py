@@ -4,6 +4,7 @@ The central invariant (paper §V: "any errors ... would cause incorrect
 SpMV"): EVERY valid Operator Graph applied to ANY matrix must produce a
 program whose output matches the float64 dense oracle.
 """
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -108,6 +109,25 @@ def test_any_valid_graph_is_correct(m, g):
     x = np.random.default_rng(0).standard_normal(m.n_cols).astype(np.float32)
     oracle = m.spmv_dense_oracle(x)
     y = np.asarray(prog(x))
+    scale = float(np.abs(oracle).max()) + 1e-30
+    np.testing.assert_allclose(y, oracle, atol=2e-4 * scale + 1e-5, rtol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=sparse_matrices(), g=operator_graphs(), b=st.integers(1, 5))
+def test_any_valid_graph_is_correct_batched(m, g, b):
+    """The invariant extends to the fused multi-RHS path: for every
+    (matrix, graph, B), program((n_cols, B)) == dense SpMM oracle."""
+    if m.nnz == 0:
+        return
+    g.validate()
+    meta = run_graph(m, g)
+    prog = build_spmv(meta, jit=False)
+    x = np.random.default_rng(1).standard_normal(
+        (m.n_cols, b)).astype(np.float32)
+    oracle = m.spmm_dense_oracle(x)
+    y = np.asarray(prog(jnp.asarray(x)))
+    assert y.shape == (m.n_rows, b)
     scale = float(np.abs(oracle).max()) + 1e-30
     np.testing.assert_allclose(y, oracle, atol=2e-4 * scale + 1e-5, rtol=0)
 

@@ -4,7 +4,7 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core.search import (AlphaSparseSearch, SearchConfig, Structure,
+from repro.core.search import (AlphaSparseSearch, SearchConfig,
                                _structure_space, search)
 from repro.core.matrices import banded_matrix, powerlaw_matrix
 

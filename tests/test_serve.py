@@ -1,6 +1,5 @@
 """Serving engine + SparseLinear integration tests."""
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.serve import ServeConfig, ServingEngine

@@ -1,7 +1,5 @@
 """Sharding rules: divisibility fallbacks and spec structure (unit-level,
 mock mesh); the real-mesh path is covered by test_dryrun.py subprocess."""
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
@@ -64,7 +62,6 @@ def test_small_vector_replicated():
 
 
 def test_batch_specs_degrade_for_tiny_batch():
-    import jax
     from repro.dist.sharding import batch_specs
     from repro.launch.mesh import make_local_mesh
     mesh = make_local_mesh(data=1, model=1)

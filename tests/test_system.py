@@ -5,8 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import SearchConfig, search
-from repro.core.matrices import (banded_matrix, hyb_friendly_matrix,
-                                 make_suite, powerlaw_matrix)
+from repro.core.matrices import hyb_friendly_matrix, make_suite
 from repro.sparse import PerfectFormatSelector
 from conftest import assert_spmv_matches
 

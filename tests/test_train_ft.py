@@ -1,11 +1,8 @@
 """Training substrate: optimizer, data determinism, checkpoint/restart,
 fault tolerance, gradient compression."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.data.pipeline import DataConfig, SyntheticTokenPipeline
