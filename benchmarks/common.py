@@ -42,9 +42,14 @@ def program_cache():
 def cached_search(m):
     """Search results are deterministic per (matrix, budget); fig9/10/12/
     creativity share one search per matrix via the program cache (keyed on
-    the matrix fingerprint, so identical matrices coalesce)."""
-    from repro.core.search import search
-    return search(m, search_budget(), cache=program_cache())
+    the matrix fingerprint, so identical matrices coalesce). Runs through
+    ``repro.compile`` (the one compile API); returns the SearchResult the
+    figure benchmarks consume."""
+    import repro
+    cfg = search_budget()
+    plan = repro.compile(m, repro.Target(backend=cfg.backend), budget=cfg,
+                         cache=program_cache())
+    return plan.search_result
 
 
 def time_call(fn, *args, repeats: int = 5, warmup: int = 2) -> float:

@@ -10,25 +10,38 @@ measures *overhead* scaling (switch dispatch, padding, psum), not speedup —
 the per-shard work split and combine volume are the quantities that carry
 to a real mesh. Emits the scaffold CSV contract via benchmarks.common.emit.
 
+Also measures the operand-passing format dedup (ISSUE-3): per-device
+format bytes under the old closure design (every device bakes in every
+shard's format as jit constants — the ``replicated`` column) vs the
+stacked shard_map-operand design (each device stores its 1/n_shards slice
+of every family stack — ``per_device``). Results land in
+``BENCH_dist.json`` alongside timing rows for both backends (pallas in
+interpret mode — the CPU stand-in for the on-device Mosaic path).
+
 NOTE the XLA_FLAGS line must run before the first jax import (device count
 locks at init), which forces the docstring below the env setup.
 
 Usage:
   PYTHONPATH=src:benchmarks python benchmarks/dist_scaling.py
 """
+import json
+from pathlib import Path
+
 import numpy as np
 import jax
 
-from common import bench_suite, emit, gflops, time_call
+from common import SCALE, bench_suite, emit, gflops, time_call
 from repro.dist.spmv import shard_map_spmv
 
 SHARD_COUNTS = (1, 2, 4, 8)
 MATRICES = ("uniform_reg", "powerlaw_hard")
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_dist.json"
 
 
 def main():
     n_dev = len(jax.devices())
     suite = bench_suite()
+    entries = []
     for mat_name in MATRICES:
         m = suite[mat_name]
         x = np.random.default_rng(0).standard_normal(
@@ -40,17 +53,50 @@ def main():
                 continue
             mesh = jax.make_mesh((n_shards,), ("data",))
             for mode in ("row", "col"):
-                prog = shard_map_spmv(m, mesh, mode=mode)
-                y = np.asarray(prog(x))
-                assert np.abs(y - oracle).max() < 1e-4 * scale, \
-                    (mat_name, n_shards, mode)
-                t = time_call(prog, x)
-                nnz_max = max(s.matrix.nnz for s in prog.shards)
-                emit(f"dist_spmv.{mat_name}.{mode}.s{n_shards}",
-                     t * 1e6,
-                     f"gflops={gflops(m.nnz, t):.3f};"
-                     f"max_shard_nnz={nnz_max};"
-                     f"imbalance={nnz_max * n_shards / m.nnz:.2f}")
+                for backend in ("jax", "pallas"):
+                    prog = shard_map_spmv(m, mesh, mode=mode,
+                                          backend=backend)
+                    y = np.asarray(prog(x))
+                    assert np.abs(y - oracle).max() < 1e-4 * scale, \
+                        (mat_name, n_shards, mode, backend)
+                    t = time_call(prog, x)
+                    nnz_max = max(s.matrix.nnz for s in prog.shards)
+                    repl = prog.replicated_format_bytes
+                    perdev = prog.per_device_format_bytes
+                    dedup = repl / max(perdev, 1)
+                    emit(f"dist_spmv.{mat_name}.{mode}.{backend}"
+                         f".s{n_shards}",
+                         t * 1e6,
+                         f"gflops={gflops(m.nnz, t):.3f};"
+                         f"max_shard_nnz={nnz_max};"
+                         f"imbalance={nnz_max * n_shards / m.nnz:.2f};"
+                         f"fmt_bytes_replicated={repl};"
+                         f"fmt_bytes_per_device={perdev};"
+                         f"dedup={dedup:.2f}x")
+                    entries.append({
+                        "matrix": mat_name, "mode": mode,
+                        "backend": backend, "n_shards": n_shards,
+                        "us_per_call": t * 1e6,
+                        "gflops": gflops(m.nnz, t),
+                        "max_shard_nnz": nnz_max,
+                        "fmt_bytes_replicated": repl,
+                        "fmt_bytes_per_device": perdev,
+                        "dedup_x": dedup,
+                    })
+    # headline: per-device format bytes must shrink as shards are added
+    # (the closure baseline is flat — every device used to store it all)
+    qualifying = [e for e in entries
+                  if e["n_shards"] >= 4 and e["mode"] == "col"]
+    ok = bool(qualifying) and all(
+        e["fmt_bytes_per_device"] < e["fmt_bytes_replicated"]
+        for e in qualifying)
+    OUT_PATH.write_text(json.dumps({
+        "scale": SCALE, "n_devices": n_dev,
+        "dedup_ok_at_4plus_shards": ok,
+        "entries": entries,
+    }, indent=2))
+    print(f"wrote {OUT_PATH} ({len(entries)} entries, "
+          f"dedup_ok_at_4plus_shards={ok})")
 
 
 if __name__ == "__main__":

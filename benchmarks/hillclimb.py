@@ -30,14 +30,14 @@ if __name__ == "__main__":
 
 import dataclasses  # noqa: E402
 import json  # noqa: E402
-import time  # noqa: E402
 from pathlib import Path  # noqa: E402
 
 
 def _record(tag, compiled, cfg, out_dir):
+    from repro.launch.compat import normalize_cost_analysis
     from repro.launch.dryrun import collective_stats
     from repro.models import n_blocks
-    ca = compiled.cost_analysis() or {}
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     ma = compiled.memory_analysis()
     rec = {
         "tag": tag,

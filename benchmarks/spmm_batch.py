@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import run_graph
-from repro.core.kernel_builder import build_spmv
+from repro.core.kernel_builder import build_program
 from repro.core.matrices import (banded_matrix, hyb_friendly_matrix,
                                  powerlaw_matrix, random_uniform_matrix)
 from repro.dist.spmv import default_shard_graph
@@ -70,7 +70,7 @@ def spmm_families(smoke: bool) -> dict:
 def bench_one(name: str, m, batch: int, repeats: int) -> dict:
     graph = default_shard_graph(m)
     meta = run_graph(m, graph)
-    prog = build_spmv(meta, backend="pallas", interpret=True)
+    prog = build_program(meta, backend="pallas", interpret=True)
     rng = np.random.default_rng(0)
     X = jnp.asarray(rng.standard_normal((m.n_cols, batch)).astype(np.float32))
     Xrows = jnp.asarray(np.asarray(X).T)          # legacy (B, n_cols) layout

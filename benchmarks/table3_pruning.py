@@ -9,7 +9,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.search import search
+from repro.core.search import run_search
 
 from .common import bench_suite, emit, search_budget
 
@@ -21,9 +21,9 @@ def run() -> dict:
     for name in names:
         m = suite[name]
         base = search_budget()
-        with_p = search(m, dataclasses.replace(base, use_pruning=True))
-        no_p = search(m, dataclasses.replace(base, use_pruning=False,
-                                             seed=base.seed))
+        with_p = run_search(m, dataclasses.replace(base, use_pruning=True))
+        no_p = run_search(m, dataclasses.replace(base, use_pruning=False,
+                                                 seed=base.seed))
         t_ratio = no_p.wall_seconds / max(with_p.wall_seconds, 1e-9)
         p_ratio = no_p.best_seconds / max(with_p.best_seconds, 1e-9)
         t_ratios.append(t_ratio)

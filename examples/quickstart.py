@@ -1,17 +1,20 @@
 """Quickstart: AlphaSparse end to end — matrix in, machine-designed SpMV out.
 
-Mirrors the paper's top-level usage (§III): feed a Matrix Market file (or a
-generated matrix), get back a machine-designed format + kernel, compare it
-with the artificial-format baselines.
+Mirrors the paper's top-level usage (§III) through the one compile API:
+feed a Matrix Market file (or a generated matrix), get back an
+``SpmvPlan`` (machine-designed format + kernel, serializable), compare it
+with the artificial-format baselines, and round-trip it through disk.
 
   PYTHONPATH=src python examples/quickstart.py [--mtx path/to/matrix.mtx]
 """
 import argparse
+import os
+import tempfile
 import time
 
 import numpy as np
 
-from repro.core import SearchConfig, search
+import repro
 from repro.core.matrices import powerlaw_matrix, read_matrix_market
 from repro.sparse import PerfectFormatSelector
 
@@ -31,18 +34,33 @@ def main():
               f"nnz={m.nnz}, row_variance={m.row_variance():.0f} "
               f"({'irregular' if m.is_irregular() else 'regular'})")
 
-    print("\n-- AlphaSparse search (Operator Graph space) --")
+    print("\n-- repro.compile (AlphaSparse search over Operator Graphs) --")
     t0 = time.time()
-    res = search(m, SearchConfig(max_seconds=args.seconds))
+    plan = repro.compile(m, repro.Target(backend="jax"),
+                         budget=args.seconds)
+    res = plan.search_result
     print(f"searched {res.n_evaluations} designs in {res.wall_seconds:.1f}s "
           f"(pruned: {', '.join(res.pruned_ops) or 'nothing'})")
-    print(f"best machine-designed program: {res.best_graph.label()}")
-    print(f"  {res.gflops:.3f} GFLOPS   "
+    print(f"best machine-designed plan: {plan.graph.label()}")
+    print(f"  {plan.search_gflops:.3f} GFLOPS   "
           f"machine-designed={res.is_machine_designed()}   "
-          f"branched={res.best_graph.has_branches()}")
+          f"branched={plan.graph.has_branches()}")
     if res.cost_model_mad is not None:
         print(f"  cost-model mean abs deviation: {res.cost_model_mad:.1%} "
               f"(paper reports 5%)")
+
+    print("\n-- plan round trip (save -> load -> run) --")
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "matrix.plan.npz")
+        plan.save(path)
+        loaded = repro.SpmvPlan.load(path)
+        x = np.random.default_rng(0).standard_normal(
+            m.n_cols).astype(np.float32)
+        same = np.array_equal(np.asarray(plan(x)), np.asarray(loaded(x)))
+        print(f"saved {os.path.getsize(path)} bytes; loaded plan is "
+              f"bit-identical: {same}")
+        if not same:
+            raise SystemExit("FAIL: loaded plan is not bit-identical")
 
     print("\n-- Perfect Format Selector (traditional auto-tuning) --")
     sel = PerfectFormatSelector().select(m)
@@ -52,11 +70,12 @@ def main():
     print(f"\nAlphaSparse speedup over PFS: "
           f"{sel.best_seconds / res.best_seconds:.2f}x")
 
-    # verify correctness against the float64 oracle
-    x = np.random.default_rng(0).standard_normal(m.n_cols).astype(np.float32)
-    err = np.abs(np.asarray(res.best_program(x))
-                 - m.spmv_dense_oracle(x)).max()
+    # verify correctness against the float64 oracle (CI gates on this)
+    oracle = m.spmv_dense_oracle(x)
+    err = np.abs(np.asarray(plan(x)) - oracle).max()
     print(f"max abs error vs dense float64 oracle: {err:.2e}")
+    if err > 1e-3 * (np.abs(oracle).max() + 1e-30):
+        raise SystemExit("FAIL: plan output does not match the oracle")
 
 
 if __name__ == "__main__":

@@ -5,10 +5,11 @@ model + the AlphaSparse SparseLinear integration (pruned-weight decode).
 """
 import numpy as np
 
+import repro
 from repro.configs import get_config
 from repro.serve import ServeConfig, ServingEngine
 from repro.serve.engine import Request
-from repro.serve.sparse_linear import sparsify_linear
+from repro.serve.sparse_linear import SparseLinear, prune_magnitude
 
 
 def main():
@@ -29,7 +30,15 @@ def main():
           "the serving path) --")
     d = cfg.d_model
     w = np.asarray(rng.standard_normal((4 * d, d)), np.float32)
-    sl = sparsify_linear(w, density=0.08, do_search=False)
+    m = prune_magnitude(w, 0.08)
+    # batch_size=4: the plan serves the engine's decode batch on the
+    # fused multi-RHS path
+    plan = repro.compile(m, repro.Target(batch_size=4),
+                         budget=repro.SearchConfig(max_seconds=5,
+                                                   max_structures=2,
+                                                   coarse_samples=2,
+                                                   timing_repeats=1))
+    sl = SparseLinear.from_plan(plan, m)
     x = rng.standard_normal((4, d)).astype(np.float32)  # batch of hiddens
     y = np.asarray(sl(x))
     dense = x @ sl.matrix.to_dense().T

@@ -4,17 +4,18 @@ on your own data).
 
   PYTHONPATH=src python examples/spmv_search_report.py
 """
-from repro.core import SearchConfig, search
+import repro
 from repro.core.matrices import make_suite
 
 
 def main():
     suite = make_suite("small")
-    cfg = SearchConfig(max_seconds=15, max_structures=8, coarse_samples=4)
+    cfg = repro.SearchConfig(max_seconds=15, max_structures=8,
+                             coarse_samples=4)
     print(f"{'matrix':16s} {'nnz':>7s} {'row_var':>9s} {'GFLOPS':>7s} "
           f"{'designed':>9s} {'branched':>9s}  graph")
     for name, m in suite.items():
-        res = search(m, cfg)
+        res = repro.compile(m, budget=cfg).search_result
         print(f"{name:16s} {m.nnz:7d} {m.row_variance():9.1f} "
               f"{res.gflops:7.3f} {str(res.is_machine_designed()):>9s} "
               f"{str(res.best_graph.has_branches()):>9s}  "

@@ -1,0 +1,48 @@
+"""AlphaSparse reproduction: machine-designed SpMV formats/kernels in
+JAX/Pallas, grown into a sharded / batched / served system.
+
+Public surface (the one compile API)::
+
+    import repro
+    plan = repro.compile(matrix, repro.Target(backend="pallas"))
+    y = plan(x)                       # (n_cols,) or (n_cols, B)
+    plan.save("matrix.plan.npz")
+    plan2 = repro.SpmvPlan.load("matrix.plan.npz")
+
+Attribute access is lazy (PEP 562): ``import repro`` imports neither jax
+nor numpy, so launchers (``repro.launch.dryrun``, benchmarks) can still
+set ``XLA_FLAGS`` before the first jax import.
+"""
+
+_EXPORTS = {
+    # the compile API
+    "compile": "repro.api",
+    "Target": "repro.api",
+    "SpmvPlan": "repro.api",
+    "ShardedSpmvPlan": "repro.api",
+    "PlanStore": "repro.api",
+    "load_plan": "repro.api",
+    # core containers & search surface
+    "SparseMatrix": "repro.core.matrices",
+    "read_matrix_market": "repro.core.matrices",
+    "make_suite": "repro.core.matrices",
+    "OperatorGraph": "repro.core.graph",
+    "SearchConfig": "repro.core.search",
+    "SearchResult": "repro.core.search",
+    "ProgramCache": "repro.core.search",
+    "run_search": "repro.core.search",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return __all__

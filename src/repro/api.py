@@ -1,0 +1,584 @@
+"""The one compile API: ``repro.compile(matrix, target) -> SpmvPlan``.
+
+AlphaSparse's contract is "arbitrary sparse matrix in, performant
+machine-designed format + kernel out" (paper §III). This module is that
+contract as a single surface:
+
+* :class:`Target` — where the program runs: backend ("jax" | "pallas"),
+  interpret mode, an optional device mesh (sharded execution), partition
+  mode/balance, decode batch size, dtype.
+* :func:`compile` — matrix + Target (+ search budget) in, :class:`SpmvPlan`
+  out. ``budget`` is a ``SearchConfig`` (or seconds); ``graph=`` skips the
+  search and designs with a fixed Operator Graph.
+* :class:`SpmvPlan` / :class:`ShardedSpmvPlan` — THE program artifact: a
+  registered JAX pytree whose *leaves* are the packed format arrays (no
+  jitted-closure constants) and whose static treedef is the winning
+  Operator Graph + kernel spec + Target. Plans call (1-D SpMV / 2-D fused
+  SpMM dispatch), ``save``/``load`` through npz (graph + arrays — the
+  loaded plan is bit-identical, no graph replay needed), ``describe()``
+  and ``cost_analysis()``.
+* :class:`PlanStore` — a directory of saved plans keyed by
+  (matrix fingerprint, budget, Target); supersedes ``ProgramCache``'s
+  replay-only entries for serving restarts.
+
+The historical entrypoints (``search``, ``build_spmv``,
+``sparsify_linear*``) are thin deprecated shims over this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import json
+from pathlib import Path
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import OperatorGraph, run_graph
+from repro.core.kernel_builder import build_kernel, build_program
+from repro.core.matrices import SparseMatrix
+from repro.core.search import (ProgramCache, SearchConfig, SearchResult,
+                               _graph_from_jsonable, _graph_to_jsonable,
+                               run_search)
+
+__all__ = ["Target", "SpmvPlan", "ShardedSpmvPlan", "PlanStore", "compile",
+           "load_plan"]
+
+PLAN_FORMAT_VERSION = 1
+
+
+# --------------------------------- Target ----------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Target:
+    """Where a compiled plan runs.
+
+    ``backend="jax"`` is the pure-jnp program (CPU oracle / timing);
+    ``"pallas"`` the TPU kernels (``interpret=True`` is the CPU stand-in
+    for Mosaic). A non-None ``mesh`` compiles a sharded plan over
+    ``axis_name`` with the given ``partition`` mode ("row" | "col") and
+    boundary ``balance`` ("nnz" | "rows"). ``batch_size`` is the number of
+    right-hand sides the plan is tuned for (B > 1 makes the search time
+    candidates on the fused SpMM path). ``dtype`` is the input/activation
+    dtype (format arrays are float32).
+    """
+
+    backend: str = "jax"
+    interpret: bool = True
+    mesh: Optional[object] = None          # jax.sharding.Mesh
+    axis_name: str = "data"
+    partition: str = "row"
+    balance: str = "nnz"
+    batch_size: int = 1
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.backend not in ("jax", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.partition not in ("row", "col"):
+            raise ValueError(f"unknown partition {self.partition!r}")
+        if self.dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"unsupported dtype {self.dtype!r} "
+                             "(float32 | bfloat16)")
+        if self.dtype != "float32" and self.backend == "pallas":
+            raise ValueError("pallas kernels are float32-only for now")
+
+    def spec_dict(self) -> dict:
+        """JSON-able identity (mesh reduced to its axis shape)."""
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self) if f.name != "mesh"}
+        d["mesh"] = (None if self.mesh is None
+                     else sorted((str(k), int(v))
+                                 for k, v in dict(self.mesh.shape).items()))
+        return d
+
+    def key(self) -> str:
+        blob = json.dumps(self.spec_dict(), sort_keys=True)
+        return hashlib.sha1(blob.encode()).hexdigest()[:8]
+
+
+def _x_dtype(target: Target):
+    return jnp.bfloat16 if target.dtype == "bfloat16" else jnp.float32
+
+
+# ------------------------------ dense plans ---------------------------------
+
+@functools.lru_cache(maxsize=256)
+def _dense_kernel(spec_json: str, backend: str, interpret: bool):
+    spec = json.loads(spec_json)
+    return jax.jit(build_kernel(spec, backend=backend, interpret=interpret))
+
+
+@dataclasses.dataclass
+class SpmvPlan:
+    """A compiled (single-mesh-less) SpMV/SpMM program artifact.
+
+    Pytree: leaves are the format arrays (``fmt``), everything else is
+    static treedef — so a plan can be passed through ``jax.jit`` /
+    ``shard_map`` boundaries, donated, or checkpointed like any other
+    parameter pytree.
+    """
+
+    supports_batch = True
+
+    fmt: dict                       # name -> array  (the pytree leaves)
+    spec_json: str                  # kernel spec (kernel_builder schema)
+    graph_json: Optional[str]       # winning OperatorGraph, if any
+    target: Target
+    search_gflops: Optional[float] = None
+    # ephemeral: the full SearchResult when this plan came from a live
+    # search in this process (not serialized, not part of the pytree)
+    search_result: Optional[SearchResult] = dataclasses.field(
+        default=None, compare=False, repr=False)
+
+    # -- geometry ----------------------------------------------------------
+    @functools.cached_property
+    def spec(self) -> dict:
+        return json.loads(self.spec_json)
+
+    @property
+    def n_rows(self) -> int:
+        return self.spec["n_rows"]
+
+    @property
+    def n_cols(self) -> int:
+        return self.spec["n_cols"]
+
+    @property
+    def nnz(self) -> int:
+        return self.spec["nnz"]
+
+    @property
+    def graph(self) -> Optional[OperatorGraph]:
+        if self.graph_json is None:
+            return None
+        return _graph_from_jsonable(json.loads(self.graph_json))
+
+    @property
+    def stored_bytes(self) -> int:
+        return sum(int(np.prod(a.shape)) * np.dtype(a.dtype).itemsize
+                   for a in self.fmt.values())
+
+    # -- execution ---------------------------------------------------------
+    def __call__(self, x) -> jax.Array:
+        """x: (n_cols,) -> (n_rows,), or (n_cols, B) -> (n_rows, B)."""
+        x = jnp.asarray(x, _x_dtype(self.target))
+        fn = _dense_kernel(self.spec_json, self.target.backend,
+                           self.target.interpret)
+        return fn(self.fmt, x)
+
+    # -- reporting ---------------------------------------------------------
+    def describe(self) -> str:
+        spec = self.spec
+        g = self.graph
+        lines = [f"SpmvPlan {spec['n_rows']}x{spec['n_cols']} "
+                 f"nnz={spec['nnz']} padded={spec['padded_nnz']} "
+                 f"stored={self.stored_bytes}B",
+                 f"  target: backend={self.target.backend} "
+                 f"interpret={self.target.interpret} "
+                 f"batch_size={self.target.batch_size} "
+                 f"dtype={self.target.dtype}",
+                 f"  graph: {g.label() if g else '(heuristic)'}"]
+        if self.search_gflops is not None:
+            lines.append(f"  searched: {self.search_gflops:.3f} GFLOPS")
+        for s in spec["steps"]:
+            lines.append(f"  step {s['key']}: {s['report']}")
+        return "\n".join(lines)
+
+    def cost_analysis(self, batch_size: Optional[int] = None) -> dict:
+        """XLA cost analysis of the compiled call, shape-normalized
+        across jax versions (``repro.launch.compat``)."""
+        from repro.launch.compat import normalize_cost_analysis
+        b = batch_size if batch_size is not None else self.target.batch_size
+        shape = (self.n_cols,) if b <= 1 else (self.n_cols, b)
+        x = jax.ShapeDtypeStruct(shape, _x_dtype(self.target))
+        fn = _dense_kernel(self.spec_json, self.target.backend,
+                           self.target.interpret)
+        compiled = fn.lower(self.fmt, x).compile()
+        return normalize_cost_analysis(compiled.cost_analysis())
+
+    # -- serialization -----------------------------------------------------
+    def save(self, path) -> None:
+        header = {"format_version": PLAN_FORMAT_VERSION, "kind": "dense",
+                  "spec": self.spec, "graph": (None if self.graph_json is None
+                                               else json.loads(self.graph_json)),
+                  "target": self.target.spec_dict(),
+                  "search_gflops": self.search_gflops}
+        arrays = {f"fmt::{k}": np.asarray(v) for k, v in self.fmt.items()}
+        np.savez(path, __plan__=np.str_(json.dumps(header)), **arrays)
+
+    @staticmethod
+    def load(path, mesh=None) -> "SpmvPlan | ShardedSpmvPlan":
+        """Load any saved plan; sharded plans need ``mesh`` re-attached."""
+        return load_plan(path, mesh=mesh)
+
+
+def _target_from_dict(d: dict, mesh=None) -> Target:
+    kw = {k: v for k, v in d.items() if k != "mesh"}
+    return Target(mesh=mesh, **kw)
+
+
+def _tree_flatten_plan(plan: SpmvPlan):
+    keys = tuple(sorted(plan.fmt))
+    leaves = tuple(plan.fmt[k] for k in keys)
+    aux = (keys, plan.spec_json, plan.graph_json, plan.target,
+           plan.search_gflops)
+    return leaves, aux
+
+
+def _tree_unflatten_plan(aux, leaves) -> SpmvPlan:
+    keys, spec_json, graph_json, target, gflops = aux
+    return SpmvPlan(fmt=dict(zip(keys, leaves)), spec_json=spec_json,
+                    graph_json=graph_json, target=target,
+                    search_gflops=gflops)
+
+
+jax.tree_util.register_pytree_node(SpmvPlan, _tree_flatten_plan,
+                                   _tree_unflatten_plan)
+
+
+# ------------------------------ sharded plans -------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _sharded_fn(steps_json: str, mode: str, n_out: int, mesh, axis_name: str,
+                backend: str, interpret: bool):
+    from repro.dist.spmv import make_stacked_fn
+    return make_stacked_fn(json.loads(steps_json), mode, n_out, mesh,
+                           axis_name, backend=backend, interpret=interpret)
+
+
+@dataclasses.dataclass
+class ShardedSpmvPlan:
+    """A compiled sharded plan: per-family stacked format arrays (leaves,
+    leading dim sharded over the mesh axis) + static shard geometry.
+
+    Unlike the old closure design, each device stores only its 1/n_shards
+    slice of every family stack; the shard_map body receives the stacks as
+    operands and needs no ``lax.switch``.
+    """
+
+    supports_batch = True
+
+    stacks: dict                    # name -> (n_shards, ...) arrays (leaves)
+    steps_json: str                 # synthetic per-family kernel spec
+    mode: str                       # 'row' | 'col'
+    n_rows: int
+    n_cols: int
+    nnz: int
+    band_rows: int                  # row mode: padded per-device band size
+    bounds: tuple                   # ((start, stop), ...) per shard
+    target: Target
+    replicated_bytes: int = 0       # closure-design baseline (all shards)
+    search_result: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.bounds)
+
+    @property
+    def per_device_format_bytes(self) -> int:
+        n = max(self.n_shards, 1)
+        return sum(v.nbytes // n for v in self.stacks.values())
+
+    @property
+    def replicated_format_bytes(self) -> int:
+        return self.replicated_bytes
+
+    @classmethod
+    def from_program(cls, sprog, target: Target,
+                     search_result=None) -> "ShardedSpmvPlan":
+        """Adopt a ``dist.spmv.ShardedSpmvProgram``'s stacked operands."""
+        return cls(stacks=dict(sprog.stacks),
+                   steps_json=json.dumps(sprog.steps),
+                   mode=sprog.mode, n_rows=sprog.n_rows,
+                   n_cols=sprog.n_cols, nnz=sprog.nnz,
+                   band_rows=sprog.band_rows,
+                   bounds=tuple((s.start, s.stop) for s in sprog.shards),
+                   target=target,
+                   replicated_bytes=sprog.replicated_format_bytes,
+                   search_result=search_result)
+
+    def _n_out(self) -> int:
+        return self.band_rows if self.mode == "row" else self.n_rows
+
+    def __call__(self, x) -> jax.Array:
+        if self.target.mesh is None:
+            raise ValueError("sharded plan has no mesh attached; load with "
+                             "SpmvPlan.load(path, mesh=...) or rebuild the "
+                             "Target with a mesh")
+        from repro.dist.spmv import stacked_call
+        fn = _sharded_fn(self.steps_json, self.mode, self._n_out(),
+                         self.target.mesh, self.target.axis_name,
+                         self.target.backend, self.target.interpret)
+        return stacked_call(fn, self.stacks, x, self.mode, self.n_cols,
+                            [stop - start for start, stop in self.bounds],
+                            dtype=_x_dtype(self.target))
+
+    def describe(self) -> str:
+        steps = json.loads(self.steps_json)
+        lines = [f"ShardedSpmvPlan {self.n_rows}x{self.n_cols} "
+                 f"nnz={self.nnz} mode={self.mode} "
+                 f"shards={self.n_shards}",
+                 f"  target: backend={self.target.backend} "
+                 f"interpret={self.target.interpret} "
+                 f"axis={self.target.axis_name}",
+                 f"  format bytes/device: {self.per_device_format_bytes} "
+                 f"(closure baseline {self.replicated_bytes})"]
+        for s in steps:
+            lines.append(f"  family {s['key']}: {s['report']}")
+        return "\n".join(lines)
+
+    def cost_analysis(self, batch_size: Optional[int] = None) -> dict:
+        from repro.launch.compat import normalize_cost_analysis
+        if self.target.mesh is None:
+            raise ValueError("sharded plan has no mesh attached; load with "
+                             "SpmvPlan.load(path, mesh=...) first")
+        b = batch_size if batch_size is not None else self.target.batch_size
+        n_in = (self.n_cols if self.mode == "row"
+                else -(-self.n_cols // self.n_shards) * self.n_shards)
+        shape = (n_in,) if b <= 1 else (n_in, b)
+        x = jax.ShapeDtypeStruct(shape, _x_dtype(self.target))
+        fn = _sharded_fn(self.steps_json, self.mode, self._n_out(),
+                         self.target.mesh, self.target.axis_name,
+                         self.target.backend, self.target.interpret)
+        compiled = fn.lower(self.stacks, x).compile()
+        return normalize_cost_analysis(compiled.cost_analysis())
+
+    def save(self, path) -> None:
+        header = {"format_version": PLAN_FORMAT_VERSION, "kind": "sharded",
+                  "steps": json.loads(self.steps_json), "mode": self.mode,
+                  "n_rows": self.n_rows, "n_cols": self.n_cols,
+                  "nnz": self.nnz, "band_rows": self.band_rows,
+                  "bounds": [list(b) for b in self.bounds],
+                  "replicated_bytes": self.replicated_bytes,
+                  "target": self.target.spec_dict()}
+        arrays = {f"stack::{k}": np.asarray(v)
+                  for k, v in self.stacks.items()}
+        np.savez(path, __plan__=np.str_(json.dumps(header)), **arrays)
+
+    load = staticmethod(SpmvPlan.load)
+
+
+def _tree_flatten_sharded(plan: ShardedSpmvPlan):
+    keys = tuple(sorted(plan.stacks))
+    leaves = tuple(plan.stacks[k] for k in keys)
+    aux = (keys, plan.steps_json, plan.mode, plan.n_rows, plan.n_cols,
+           plan.nnz, plan.band_rows, plan.bounds, plan.target,
+           plan.replicated_bytes)
+    return leaves, aux
+
+
+def _tree_unflatten_sharded(aux, leaves) -> ShardedSpmvPlan:
+    (keys, steps_json, mode, n_rows, n_cols, nnz, band_rows, bounds,
+     target, repl) = aux
+    return ShardedSpmvPlan(stacks=dict(zip(keys, leaves)),
+                           steps_json=steps_json, mode=mode, n_rows=n_rows,
+                           n_cols=n_cols, nnz=nnz, band_rows=band_rows,
+                           bounds=bounds, target=target,
+                           replicated_bytes=repl)
+
+
+jax.tree_util.register_pytree_node(ShardedSpmvPlan, _tree_flatten_sharded,
+                                   _tree_unflatten_sharded)
+
+
+def load_plan(path, mesh=None) -> Union[SpmvPlan, ShardedSpmvPlan]:
+    """Load a saved plan. Sharded plans need a live ``mesh`` re-attached
+    (meshes name physical devices and are deliberately not serialized)."""
+    with np.load(path, allow_pickle=False) as z:
+        header = json.loads(str(z["__plan__"]))
+        if header.get("format_version", 0) > PLAN_FORMAT_VERSION:
+            raise ValueError(f"plan {path} has format_version "
+                             f"{header['format_version']} > supported "
+                             f"{PLAN_FORMAT_VERSION}")
+        if header["kind"] == "dense":
+            fmt = {k[len("fmt::"):]: jnp.asarray(z[k])
+                   for k in z.files if k.startswith("fmt::")}
+            return SpmvPlan(
+                fmt=fmt, spec_json=json.dumps(header["spec"]),
+                graph_json=(None if header["graph"] is None
+                            else json.dumps(header["graph"])),
+                target=_target_from_dict(header["target"]),
+                search_gflops=header.get("search_gflops"))
+        target = _target_from_dict(header["target"], mesh=mesh)
+        stacks = {k[len("stack::"):]: z[k]
+                  for k in z.files if k.startswith("stack::")}
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            sharding = NamedSharding(mesh, P(target.axis_name))
+            stacks = {k: jax.device_put(v, sharding)
+                      for k, v in stacks.items()}
+        return ShardedSpmvPlan(
+            stacks=stacks, steps_json=json.dumps(header["steps"]),
+            mode=header["mode"], n_rows=header["n_rows"],
+            n_cols=header["n_cols"], nnz=header["nnz"],
+            band_rows=header["band_rows"],
+            bounds=tuple(tuple(b) for b in header["bounds"]),
+            target=target, replicated_bytes=header["replicated_bytes"])
+
+
+# -------------------------------- compile -----------------------------------
+
+def _as_search_config(budget, target: Target) -> SearchConfig:
+    if budget is None:
+        cfg = SearchConfig()
+    elif isinstance(budget, SearchConfig):
+        cfg = budget
+    elif isinstance(budget, (int, float)):
+        cfg = SearchConfig(max_seconds=float(budget))
+    else:
+        raise TypeError(f"budget must be a SearchConfig or seconds, got "
+                        f"{type(budget).__name__}")
+    bsz = target.batch_size if target.batch_size > 1 else cfg.batch_size
+    return dataclasses.replace(cfg, backend=target.backend,
+                               batch_size=max(bsz, 1))
+
+
+def _plan_from_program(prog, graph: Optional[OperatorGraph],
+                       target: Target, search_result=None) -> SpmvPlan:
+    graph_json = (None if graph is None
+                  else json.dumps(_graph_to_jsonable(graph)))
+    plan = SpmvPlan(fmt=dict(prog.fmt), spec_json=json.dumps(prog.spec),
+                    graph_json=graph_json, target=target,
+                    search_gflops=(search_result.gflops
+                                   if search_result else None),
+                    search_result=search_result)
+    return plan
+
+
+def compile(matrix: SparseMatrix, target: Optional[Target] = None,
+            budget=None, *, graph: Optional[OperatorGraph] = None,
+            cache: Optional[ProgramCache] = None,
+            store: Optional["PlanStore"] = None
+            ) -> Union[SpmvPlan, ShardedSpmvPlan]:
+    """Matrix in, machine-designed program artifact out (paper §III).
+
+    * ``target`` — where the plan runs (defaults to ``Target()``: jax
+      backend, single device).
+    * ``budget`` — search budget: a ``SearchConfig``, a number of seconds,
+      or None for the default budget. With ``target.mesh`` set and
+      ``budget=None``, shards take the search-free heuristic design.
+    * ``graph`` — skip the search entirely and design with this Operator
+      Graph (sharded targets apply it per shard).
+    * ``cache`` — a ``ProgramCache`` memoising raw search results.
+    * ``store`` — a :class:`PlanStore`; a prior plan for the same
+      (matrix, budget, target) is loaded instead of recompiled, and new
+      plans are saved. Store hits carry no ``search_result`` (the full
+      ``SearchResult`` is process-ephemeral and not serialized) —
+      ``search_gflops`` survives the round trip.
+    """
+    target = target or Target()
+    if store is not None:
+        hit = store.get(matrix, target, budget, graph)
+        if hit is not None:
+            return hit
+
+    if target.mesh is None:
+        if graph is not None:
+            meta = run_graph(matrix, graph)
+            prog = build_program(meta, backend=target.backend,
+                                 interpret=target.interpret, jit=False)
+            plan = _plan_from_program(prog, graph, target)
+        else:
+            cfg = _as_search_config(budget, target)
+            res = run_search(matrix, cfg, cache=cache)
+            plan = _plan_from_program(res.best_program, res.best_graph,
+                                      target, search_result=res)
+    else:
+        from repro.dist.search import ShardedSearchConfig, dist_search
+        from repro.dist.spmv import shard_map_spmv
+        search_result = None
+        if graph is not None:
+            sprog = shard_map_spmv(matrix, target.mesh,
+                                   axis_name=target.axis_name,
+                                   mode=target.partition,
+                                   balance=target.balance,
+                                   graph_for=lambda m: graph,
+                                   backend=target.backend,
+                                   interpret=target.interpret)
+        elif budget is None:
+            sprog = shard_map_spmv(matrix, target.mesh,
+                                   axis_name=target.axis_name,
+                                   mode=target.partition,
+                                   balance=target.balance,
+                                   backend=target.backend,
+                                   interpret=target.interpret)
+        else:
+            if isinstance(budget, ShardedSearchConfig):
+                # full per-shard control (min_nnz_for_search, seeds, ...);
+                # the Target still decides placement and backend
+                dcfg = dataclasses.replace(
+                    budget, axis_name=target.axis_name,
+                    mode=target.partition, balance=target.balance,
+                    backend=target.backend, interpret=target.interpret)
+            else:
+                dcfg = ShardedSearchConfig(axis_name=target.axis_name,
+                                           mode=target.partition,
+                                           balance=target.balance,
+                                           search=_as_search_config(
+                                               budget, target),
+                                           backend=target.backend,
+                                           interpret=target.interpret)
+            search_result = dist_search(matrix, target.mesh, dcfg,
+                                        cache=cache)
+            sprog = search_result.program
+        plan = ShardedSpmvPlan.from_program(sprog, target,
+                                            search_result=search_result)
+
+    if store is not None:
+        store.put(matrix, target, budget, graph, plan)
+    return plan
+
+
+# -------------------------------- PlanStore ---------------------------------
+
+class PlanStore:
+    """A directory of saved plans keyed by (matrix, budget/graph, Target).
+
+    Supersedes ``ProgramCache``'s replay-only disk entries: where the
+    program cache stores the winning *graph* and re-runs the Designer +
+    kernel builder on a hit, the plan store round-trips the full artifact
+    (spec + format arrays) — a hit is a load, bit-identical to the saved
+    plan, with no matrix or Designer replay required.
+    """
+
+    def __init__(self, cache_dir):
+        self.cache_dir = Path(cache_dir)
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(matrix: SparseMatrix, target: Target, budget=None,
+            graph: Optional[OperatorGraph] = None) -> str:
+        mfp = ProgramCache.matrix_fingerprint(matrix)
+        if graph is not None:
+            bkey = "g" + hashlib.sha1(json.dumps(
+                _graph_to_jsonable(graph)).encode()).hexdigest()[:8]
+        elif budget is None:
+            bkey = "default"
+        elif dataclasses.is_dataclass(budget):   # SearchConfig / sharded cfg
+            blob = json.dumps(dataclasses.asdict(budget), sort_keys=True,
+                              default=str)
+            bkey = hashlib.sha1(blob.encode()).hexdigest()[:8]
+        else:
+            bkey = f"s{float(budget):g}"
+        return f"{mfp}-{bkey}-{target.key()}"
+
+    def _path(self, key: str) -> Path:
+        return self.cache_dir / f"{key}.plan.npz"
+
+    def get(self, matrix, target, budget=None, graph=None):
+        path = self._path(self.key(matrix, target, budget, graph))
+        if not path.exists():
+            self.misses += 1
+            return None
+        self.hits += 1
+        return load_plan(path, mesh=target.mesh)
+
+    def put(self, matrix, target, budget, graph, plan) -> None:
+        self.cache_dir.mkdir(parents=True, exist_ok=True)
+        plan.save(self._path(self.key(matrix, target, budget, graph)))

@@ -1,9 +1,17 @@
 """AlphaSparse core: Operator Graph, Designer, Format & Kernel Generator,
-Search Engine (paper sections IV-VI), adapted to TPU (DESIGN.md)."""
+Search Engine (paper sections IV-VI), adapted to TPU (DESIGN.md).
+
+The recommended entrypoint is ``repro.compile(matrix, target)`` (see
+``repro.api``), which drives :func:`run_search` / :func:`build_program`
+and returns a serializable ``SpmvPlan``. The historical one-off
+entrypoints (:func:`search`, :func:`build_spmv`) remain as deprecated
+shims over that surface.
+"""
 from .matrices import SparseMatrix, make_suite, read_matrix_market  # noqa: F401
 from .metadata import MetadataSet, from_matrix  # noqa: F401
 from .operators import OPERATORS, OpSpec  # noqa: F401
 from .graph import OperatorGraph, GraphError, run_graph  # noqa: F401
-from .kernel_builder import SpmvProgram, build_spmv  # noqa: F401
+from .kernel_builder import (SpmvProgram, build_program,  # noqa: F401
+                             build_spmv, build_kernel, plan_format)
 from .search import (AlphaSparseSearch, ProgramCache, SearchConfig,  # noqa: F401
-                     SearchResult, search)
+                     SearchResult, run_search, search)

@@ -11,6 +11,20 @@ Two backends share one plan:
   * ``jax``    — pure-jnp program (the oracle; also what we time on CPU).
   * ``pallas`` — the TPU kernels in ``repro.kernels`` (interpret=True on CPU).
 
+Since the compile-API redesign the generator is two explicit stages:
+
+1. ``plan_format(meta)`` packs the format arrays (``fmt``: name -> array)
+   and emits a JSON-able *kernel spec* — the complete static description of
+   the generated program (step kinds, column models, combine plans,
+   geometry). Nothing the kernel needs lives in Python closures anymore.
+2. ``build_kernel(spec, backend, interpret)`` interprets the spec into the
+   runnable ``fn(fmt, x)``.
+
+That split is what makes ``repro.SpmvPlan`` a portable artifact: the spec
+plus the ``fmt`` arrays round-trip through an npz file and rebuild the exact
+same program on load (``repro.api``), and the distributed layer can re-pack
+``fmt`` into stacked shard_map operands (``repro.dist.spmv``).
+
 Generated programs are multi-RHS aware: calling a program with a 2-D x of
 shape (n_cols, B) dispatches to the fused SpMM kernel variants (format
 arrays stream once for all B right-hand sides) and returns (n_rows, B);
@@ -31,18 +45,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import compress
+from .deprecation import warn_once
 from .metadata import (Block, EllTileLayout, MetadataSet, SegTileLayout)
 
-__all__ = ["SpmvProgram", "build_spmv"]
+__all__ = ["SpmvProgram", "build_program", "build_spmv", "plan_format",
+           "build_kernel", "SPEC_VERSION"]
+
+SPEC_VERSION = 1
 
 
 @dataclasses.dataclass
 class SpmvProgram:
-    """A generated SpMV/SpMM program: format arrays + jitted kernel + report.
+    """A generated SpMV/SpMM program: format arrays + kernel spec + report.
 
     ``__call__`` dispatches on ``x.ndim``: a (n_cols,) vector runs the
     1-RHS SpMV kernels, a (n_cols, B) tile runs the fused multi-RHS SpMM
     variants (one format stream for all B columns) and yields (n_rows, B).
+
+    ``fmt`` (the packed format arrays) and ``spec`` (the JSON-able kernel
+    description) fully determine the program — ``fn`` is just
+    ``build_kernel(spec, ...)`` jitted, and carries no baked-in constants.
     """
 
     # explicit batching protocol (see serve.sparse_linear): callers check
@@ -55,6 +77,9 @@ class SpmvProgram:
     fmt: dict                     # name -> jnp array (the stored format)
     fn: Callable                  # fn(fmt, x) -> y  (jitted)
     descriptor: dict              # structural report (kernels, combines, fits)
+    spec: dict = None             # JSON-able kernel spec (see plan_format)
+    backend: str = "jax"
+    interpret: bool = True
 
     def __call__(self, x):
         return self.fn(self.fmt, x)
@@ -72,26 +97,37 @@ class SpmvProgram:
         return 2 * self.nnz  # useful flops; padding waste is padded_nnz-based
 
 
-def _col_model_expr(model: compress.ArrayModel, shape):
+def _col_model_expr(kind: str, params, n: int, shape):
     """Recompute an elided int array inside the kernel (jnp, no exceptions)."""
-    i = jnp.arange(model.n, dtype=jnp.int32)
-    if model.kind == "linear":
-        a, b = model.params
+    i = jnp.arange(int(n), dtype=jnp.int32)
+    if kind == "linear":
+        a, b = params
         v = a * i + b
-    elif model.kind == "step":
-        a, b, k = model.params
+    elif kind == "step":
+        a, b, k = params
         v = a * (i // k) + b
     else:
-        a, b, c, p = model.params
+        a, b, c, p = params
         v = a * (i % p) + c * (i // p) + b
-    return v.reshape(shape)
+    return v.reshape(tuple(shape))
 
 
-def _plan_ell_block(bi: int, block: Block, n_rows: int, fmt: dict,
-                    descriptor: dict, do_compress: bool):
-    """Plan one ELL-layout block: returns a list of per-bucket closures."""
+def materialize_cols(colspec: dict, fmt: dict) -> np.ndarray:
+    """Host-side column-index array for a spec step (array or fitted model).
+
+    Used by the distributed operand-packing path, which must materialize
+    model-elided arrays to pass them as shard_map operands.
+    """
+    if colspec["mode"] == "array":
+        return np.asarray(fmt[colspec["key"]])
+    return np.asarray(_col_model_expr(colspec["model"], colspec["params"],
+                                      colspec["n"], colspec["shape"]))
+
+
+def _plan_ell_block(bi: int, block: Block, fmt: dict,
+                    steps: list, reports: list, do_compress: bool):
+    """Plan one ELL-layout block: one spec step per width bucket."""
     layout: EllTileLayout = block.layout
-    steps = []
     for ki, bucket in enumerate(layout.buckets):
         key = f"b{bi}k{ki}"
         fmt[f"{key}_vals"] = jnp.asarray(bucket.vals)
@@ -102,50 +138,45 @@ def _plan_ell_block(bi: int, block: Block, n_rows: int, fmt: dict,
         col_model = compress.fit_array(bucket.cols) if do_compress else None
         if col_model is not None and col_model.n_exceptions == 0:
             rep["cols"] = f"elided({col_model.kind})"
-            cols_ref = ("model", col_model, bucket.cols.shape)
+            colspec = {"mode": "model", "model": col_model.kind,
+                       "params": [int(p) for p in col_model.params],
+                       "n": int(np.prod(bucket.cols.shape)),
+                       "shape": [int(s) for s in bucket.cols.shape]}
         else:
             fmt[f"{key}_cols"] = jnp.asarray(bucket.cols)
-            cols_ref = ("array", f"{key}_cols", None)
+            colspec = {"mode": "array", "key": f"{key}_cols"}
 
         # --- model-driven compression: rowmap -> combine upgrade ---
         affine = compress.affine_rowmap(bucket.rowmap) if do_compress else None
         want_direct = (block.reduce.combine == "grid_acc")
         if affine is not None and affine[0] == 1:
-            a, b0 = affine
+            _, b0 = affine
             nv = int((bucket.rowmap.ravel() >= 0).sum())
             rep["combine"] = "grid_acc" if want_direct else "scatter(affine)"
             rep["rowmap"] = "elided(linear)"
-            # combine closures receive the partial pre-flattened to a
-            # (slab_rows,) or (slab_rows, B) slab — rank-agnostic adds
-            if want_direct:
-                def combine_fn(y, flat, b0=b0, nv=nv):
-                    return y.at[b0:b0 + nv].add(flat[:nv])
-            else:
-                def combine_fn(y, flat, b0=b0, nv=nv):
-                    idx = b0 + jnp.arange(nv, dtype=jnp.int32)
-                    return y.at[idx].add(flat[:nv])
-            rowmap_key = None
+            combspec = {"mode": "affine", "direct": bool(want_direct),
+                        "b0": int(b0), "nv": nv}
         else:
             if want_direct:
                 rep["combine"] = "scatter(grid_acc-fallback: rowmap not affine)"
             else:
                 rep["combine"] = "scatter"
-            rowmap_key = f"{key}_rowmap"
-            fmt[rowmap_key] = jnp.asarray(bucket.rowmap)
-            combine_fn = ("rowmap", rowmap_key)
+            fmt[f"{key}_rowmap"] = jnp.asarray(bucket.rowmap)
+            combspec = {"mode": "rowmap", "key": f"{key}_rowmap"}
 
-        steps.append(("ell", key, cols_ref, combine_fn, rep))
-        descriptor["blocks"].append(rep)
-    return steps
+        steps.append({"kind": "ell", "key": key, "cols": colspec,
+                      "combine": combspec, "report": rep})
+        reports.append(rep)
 
 
-def _plan_seg_block(bi: int, block: Block, fmt: dict, descriptor: dict,
-                    do_compress: bool):
+def _plan_seg_block(bi: int, block: Block, fmt: dict, steps: list,
+                    reports: list, do_compress: bool):
     layout: SegTileLayout = block.layout
     key = f"b{bi}s"
     fmt[f"{key}_vals"] = jnp.asarray(layout.vals)
     rep = {"kernel": block.reduce.kind, "tiles": layout.n_tiles,
            "seg_rows": layout.seg_rows, "combine": "scatter"}
+    rows_sorted = False
     if block.reduce.kind == "gmem_atom":
         # GMEM_ATOM_RED stores the global row stream directly (Merge/COO
         # style): no rowmap/descriptor arrays, no in-kernel row decode.
@@ -155,7 +186,8 @@ def _plan_seg_block(bi: int, block: Block, fmt: dict, descriptor: dict,
         fmt[f"{key}_rows"] = jnp.asarray(rows_global.astype(np.int32))
         # without converting-stage reordering the row stream stays sorted,
         # enabling the fast sorted-segment reduction
-        rep["rows_sorted"] = bool(np.all(np.diff(rows_global.ravel()) >= 0))
+        rows_sorted = bool(np.all(np.diff(rows_global.ravel()) >= 0))
+        rep["rows_sorted"] = rows_sorted
         # pallas fallback (no TPU atomics) still needs the descriptor path
         fmt[f"{key}_rowmap"] = jnp.asarray(layout.rowmap)
         fmt[f"{key}_local"] = jnp.asarray(layout.local_row)
@@ -169,105 +201,170 @@ def _plan_seg_block(bi: int, block: Block, fmt: dict, descriptor: dict,
     col_model = compress.fit_array(layout.cols) if do_compress else None
     if col_model is not None and col_model.n_exceptions == 0:
         rep["cols"] = f"elided({col_model.kind})"
-        cols_ref = ("model", col_model, layout.cols.shape)
+        colspec = {"mode": "model", "model": col_model.kind,
+                   "params": [int(p) for p in col_model.params],
+                   "n": int(np.prod(layout.cols.shape)),
+                   "shape": [int(s) for s in layout.cols.shape]}
     else:
         fmt[f"{key}_cols"] = jnp.asarray(layout.cols)
-        cols_ref = ("array", f"{key}_cols", None)
-    descriptor["blocks"].append(rep)
-    return ("seg", key, cols_ref, block.reduce.kind, layout.seg_rows, rep)
+        colspec = {"mode": "array", "key": f"{key}_cols"}
+    steps.append({"kind": "seg", "key": key, "reduce": block.reduce.kind,
+                  "seg_rows": int(layout.seg_rows),
+                  "rows_sorted": rows_sorted, "cols": colspec,
+                  "report": rep})
+    reports.append(rep)
 
 
-def build_spmv(meta: MetadataSet, backend: str = "jax",
-               interpret: bool = True, do_compress: bool = True,
-               jit: bool = True) -> SpmvProgram:
-    """Generate the SpMV program for a designed MetadataSet."""
+def plan_format(meta: MetadataSet, do_compress: bool = True
+                ) -> tuple[dict, dict]:
+    """Stage 1: pack format arrays and emit the JSON-able kernel spec."""
     for b in meta.blocks:
         if b.layout is None or b.reduce is None:
             raise ValueError("metadata not fully designed: run mapping and "
                              "implementing operators first")
     fmt: dict = {}
-    descriptor = {"backend": backend, "blocks": [],
-                  "padded_nnz": meta.padded_nnz(),
-                  "history": meta.history}
-    plans = []
+    steps: list = []
+    reports: list = []
     for bi, block in enumerate(meta.blocks):
         if isinstance(block.layout, EllTileLayout):
-            plans.extend(_plan_ell_block(bi, block, meta.n_rows, fmt,
-                                         descriptor, do_compress))
+            _plan_ell_block(bi, block, fmt, steps, reports, do_compress)
         else:
-            plans.append(_plan_seg_block(bi, block, fmt, descriptor,
-                                         do_compress))
+            _plan_seg_block(bi, block, fmt, steps, reports, do_compress)
+    spec = {"version": SPEC_VERSION,
+            "n_rows": int(meta.n_rows), "n_cols": int(meta.n_cols),
+            "nnz": int(meta.nnz), "padded_nnz": int(meta.padded_nnz()),
+            "history": list(meta.history), "steps": steps}
+    return fmt, spec
 
-    n_rows = meta.n_rows
+
+def _run_ell_step(step: dict, fmt: dict, x, y, n_rows: int,
+                  backend: str, interpret: bool):
+    rhs = x.shape[1:]
+    key = step["key"]
+    vals = fmt[f"{key}_vals"]
+    cspec = step["cols"]
+    cols = (fmt[cspec["key"]] if cspec["mode"] == "array"
+            else _col_model_expr(cspec["model"], cspec["params"],
+                                 cspec["n"], cspec["shape"]))
+    comb = step["combine"]
     if backend == "pallas":
         from repro.kernels import ops as kops  # lazy: keeps core importable
+        if comb["mode"] == "affine" and comb["direct"]:
+            # direct-write kernel: output slab, no scatter
+            op = kops.ell_spmm_direct if rhs else kops.ell_spmv_direct
+        else:
+            op = kops.ell_spmm if rhs else kops.ell_spmv
+        partial = op(vals, cols, x, interpret=interpret)
+    elif rhs:
+        partial = jnp.einsum("trw,trwb->trb", vals, x[cols])
+    else:
+        partial = jnp.einsum("trw,trw->tr", vals, x[cols])
+    flat = partial.reshape((-1,) + rhs)
+    if comb["mode"] == "rowmap":
+        rm = fmt[comb["key"]].reshape(-1)
+        safe = jnp.where(rm >= 0, rm, n_rows)
+        return y.at[safe].add(flat, mode="drop")
+    b0, nv = comb["b0"], comb["nv"]
+    if comb["direct"]:
+        return y.at[b0:b0 + nv].add(flat[:nv])
+    idx = b0 + jnp.arange(nv, dtype=jnp.int32)
+    return y.at[idx].add(flat[:nv])
+
+
+def _run_seg_step(step: dict, fmt: dict, x, y, n_rows: int,
+                  backend: str, interpret: bool):
+    rhs = x.shape[1:]
+    key = step["key"]
+    kind = step["reduce"]
+    vals = fmt[f"{key}_vals"]
+    cspec = step["cols"]
+    cols = (fmt[cspec["key"]] if cspec["mode"] == "array"
+            else _col_model_expr(cspec["model"], cspec["params"],
+                                 cspec["n"], cspec["shape"]))
+    if kind == "gmem_atom" and backend != "pallas":
+        # GMEM_ATOM_RED: one global reduction of the product stream; rows
+        # stored directly in the format (padded entries carry val=0 and a
+        # valid row -> no masking).
+        if rhs:
+            prod = (vals[..., None] * x[cols]).reshape((-1,) + rhs)
+        else:
+            prod = (vals * x[cols]).reshape(-1)
+        rows = fmt[f"{key}_rows"].reshape(-1)
+        return y + jax.ops.segment_sum(
+            prod, rows, num_segments=n_rows,
+            indices_are_sorted=step.get("rows_sorted", False))
+    rm = fmt[f"{key}_rowmap"]
+    local = fmt.get(f"{key}_local")
+    seg_end = fmt.get(f"{key}_end")
+    seg_rows = step["seg_rows"]
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        pk = "seg_scan" if kind == "gmem_atom" else kind
+        op = kops.seg_spmm if rhs else kops.seg_spmv
+        partial = op(vals, cols, local, seg_end, x,
+                     seg_rows, mode=pk, interpret=interpret)
+    else:
+        from repro.kernels import ref as kref
+        op = kref.seg_spmm_ref if rhs else kref.seg_spmv_ref
+        partial = op(vals, cols, local, seg_end, x, seg_rows, mode=kind)
+    rmf = rm.reshape(-1)
+    safe = jnp.where(rmf >= 0, rmf, n_rows)
+    return y.at[safe].add(partial.reshape((-1,) + rhs), mode="drop")
+
+
+def run_spec_step(step: dict, fmt: dict, x, y, n_rows: int,
+                  backend: str, interpret: bool):
+    """Accumulate one spec step's contribution into y (shared with dist)."""
+    if step["kind"] == "ell":
+        return _run_ell_step(step, fmt, x, y, n_rows, backend, interpret)
+    return _run_seg_step(step, fmt, x, y, n_rows, backend, interpret)
+
+
+def build_kernel(spec: dict, backend: str = "jax",
+                 interpret: bool = True) -> Callable:
+    """Stage 2: interpret a kernel spec into the runnable ``fn(fmt, x)``."""
+    n_rows = spec["n_rows"]
+    steps = spec["steps"]
 
     def run(fmt, x):
         # trace-time dispatch: 1-D x -> SpMV kernels, (n_cols, B) -> fused
         # SpMM variants. ``rhs`` is () or (B,), appended to output shapes.
         rhs = x.shape[1:]
         y = jnp.zeros((n_rows,) + rhs, dtype=jnp.float32)
-        for plan in plans:
-            if plan[0] == "ell":
-                _, key, cols_ref, combine_fn, rep = plan
-                vals = fmt[f"{key}_vals"]
-                cols = (fmt[cols_ref[1]] if cols_ref[0] == "array"
-                        else _col_model_expr(cols_ref[1], cols_ref[2]))
-                if backend == "pallas":
-                    if rep["combine"] == "grid_acc":
-                        # direct-write kernel: output slab, no scatter
-                        op = kops.ell_spmm_direct if rhs else kops.ell_spmv_direct
-                        partial = op(vals, cols, x, interpret=interpret)
-                    else:
-                        op = kops.ell_spmm if rhs else kops.ell_spmv
-                        partial = op(vals, cols, x, interpret=interpret)
-                elif rhs:
-                    partial = jnp.einsum("trw,trwb->trb", vals, x[cols])
-                else:
-                    partial = jnp.einsum("trw,trw->tr", vals, x[cols])
-                flat = partial.reshape((-1,) + rhs)
-                if isinstance(combine_fn, tuple):  # rowmap scatter
-                    rm = fmt[combine_fn[1]].reshape(-1)
-                    safe = jnp.where(rm >= 0, rm, n_rows)
-                    y = y.at[safe].add(flat, mode="drop")
-                else:
-                    y = combine_fn(y, flat)
-            else:
-                _, key, cols_ref, kind, seg_rows, rep = plan
-                vals = fmt[f"{key}_vals"]
-                rm = fmt[f"{key}_rowmap"]
-                local = fmt.get(f"{key}_local")
-                seg_end = fmt.get(f"{key}_end")
-                cols = (fmt[cols_ref[1]] if cols_ref[0] == "array"
-                        else _col_model_expr(cols_ref[1], cols_ref[2]))
-                if kind == "gmem_atom" and backend != "pallas":
-                    # GMEM_ATOM_RED: one global reduction of the product
-                    # stream; rows stored directly in the format (padded
-                    # entries carry val=0 and a valid row -> no masking).
-                    if rhs:
-                        prod = (vals[..., None] * x[cols]).reshape((-1,) + rhs)
-                    else:
-                        prod = (vals * x[cols]).reshape(-1)
-                    rows = fmt[f"{key}_rows"].reshape(-1)
-                    y = y + jax.ops.segment_sum(
-                        prod, rows, num_segments=n_rows,
-                        indices_are_sorted=rep.get("rows_sorted", False))
-                    continue
-                if backend == "pallas":
-                    pk = "seg_scan" if kind == "gmem_atom" else kind
-                    op = kops.seg_spmm if rhs else kops.seg_spmv
-                    partial = op(vals, cols, local, seg_end, x,
-                                 seg_rows, mode=pk, interpret=interpret)
-                else:
-                    from repro.kernels import ref as kref
-                    op = kref.seg_spmm_ref if rhs else kref.seg_spmv_ref
-                    partial = op(vals, cols, local, seg_end, x,
-                                 seg_rows, mode=kind)
-                rmf = rm.reshape(-1)
-                safe = jnp.where(rmf >= 0, rmf, n_rows)
-                y = y.at[safe].add(partial.reshape((-1,) + rhs), mode="drop")
+        for step in steps:
+            y = run_spec_step(step, fmt, x, y, n_rows, backend, interpret)
         return y
 
+    return run
+
+
+def build_program(meta: MetadataSet, backend: str = "jax",
+                  interpret: bool = True, do_compress: bool = True,
+                  jit: bool = True) -> SpmvProgram:
+    """Generate the SpMV program for a designed MetadataSet."""
+    fmt, spec = plan_format(meta, do_compress=do_compress)
+    descriptor = {"backend": backend,
+                  "blocks": [s["report"] for s in spec["steps"]],
+                  "padded_nnz": spec["padded_nnz"],
+                  "history": meta.history}
+    run = build_kernel(spec, backend=backend, interpret=interpret)
     fn = jax.jit(run) if jit else run
     return SpmvProgram(n_rows=meta.n_rows, n_cols=meta.n_cols, nnz=meta.nnz,
-                       fmt=fmt, fn=fn, descriptor=descriptor)
+                       fmt=fmt, fn=fn, descriptor=descriptor, spec=spec,
+                       backend=backend, interpret=interpret)
+
+
+def build_spmv(meta: MetadataSet, backend: str = "jax",
+               interpret: bool = True, do_compress: bool = True,
+               jit: bool = True) -> SpmvProgram:
+    """Deprecated alias of :func:`build_program` (old four-entrypoint API).
+
+    Prefer ``repro.compile(matrix, target)`` for the full matrix-in /
+    plan-out path, or :func:`build_program` when you already hold a
+    designed ``MetadataSet``.
+    """
+    warn_once("build_spmv",
+              "repro.core.build_spmv is deprecated; use repro.compile("
+              "matrix, target) or repro.core.build_program(meta)")
+    return build_program(meta, backend=backend, interpret=interpret,
+                         do_compress=do_compress, jit=jit)

@@ -31,13 +31,14 @@ from typing import Optional
 import numpy as np
 
 from .cost_model import GBTRegressor, program_features
+from .deprecation import warn_once
 from .graph import GraphError, OperatorGraph, run_graph
-from .kernel_builder import SpmvProgram, build_spmv
+from .kernel_builder import SpmvProgram, build_program
 from .matrices import SparseMatrix
 from .operators import OPERATORS, OpSpec
 
 __all__ = ["SearchConfig", "SearchResult", "AlphaSparseSearch", "search",
-           "ProgramCache"]
+           "run_search", "ProgramCache"]
 
 
 # ------------------------- structure templates ----------------------------
@@ -254,7 +255,7 @@ class AlphaSparseSearch:
         try:
             graph.validate()
             meta = run_graph(self.m, graph)
-            prog = build_spmv(meta, backend=self.cfg.backend)
+            prog = build_program(meta, backend=self.cfg.backend)
             y = np.asarray(prog(self._x))
             if self.cfg.check_correctness:
                 scale = np.abs(self._oracle).max() + 1e-30
@@ -364,8 +365,8 @@ class AlphaSparseSearch:
                     try:
                         g.validate()
                         meta = run_graph(self.m, g)
-                        prog = build_spmv(meta, backend=self.cfg.backend,
-                                          jit=False)
+                        prog = build_program(meta, backend=self.cfg.backend,
+                                             jit=False)
                         feats = program_features(meta, prog,
                                                  self.cfg.batch_size)
                     except (GraphError, ValueError):
@@ -470,7 +471,7 @@ class ProgramCache:
                     graph = _graph_from_jsonable(
                         json.loads(str(z["graph_json"])))
                     meta = run_graph(m, graph)
-                    prog = build_spmv(meta, backend=str(z["backend"]))
+                    prog = build_program(meta, backend=str(z["backend"]))
                     res = SearchResult(
                         best_graph=graph, best_program=prog,
                         best_seconds=float(z["best_seconds"]),
@@ -515,11 +516,13 @@ class ProgramCache:
                  pruned_ops=np.asarray(result.pruned_ops, dtype=np.str_))
 
 
-def search(matrix: SparseMatrix, config: SearchConfig = None,
-           cache: Optional[ProgramCache] = None) -> SearchResult:
-    """One-call API: matrix in, machine-designed SpMV program out (§III).
+def run_search(matrix: SparseMatrix, config: SearchConfig = None,
+               cache: Optional[ProgramCache] = None) -> SearchResult:
+    """Run the §VI search: matrix in, winning design + program + stats out.
 
-    With ``cache`` given, a prior result for the same (matrix, config,
+    This is the search primitive ``repro.compile`` drives; it returns the
+    full ``SearchResult`` (records, cost-model MAD, pruning report). With
+    ``cache`` given, a prior result for the same (matrix, config,
     batch_size) is returned without re-searching."""
     config = config or SearchConfig()
     if cache is not None:
@@ -530,3 +533,23 @@ def search(matrix: SparseMatrix, config: SearchConfig = None,
     if cache is not None:
         cache.put(matrix, config, res)
     return res
+
+
+def search(matrix: SparseMatrix, config: SearchConfig = None,
+           cache: Optional[ProgramCache] = None) -> SearchResult:
+    """Deprecated one-call API, now a thin shim over ``repro.compile``.
+
+    ``repro.compile(matrix, target, budget=config)`` is the replacement; it
+    returns an ``SpmvPlan`` (serializable, pytree-registered) whose
+    ``search_result`` attribute carries this function's return value."""
+    warn_once("search",
+              "repro.core.search.search is deprecated; use repro.compile("
+              "matrix, target, budget=config) — the returned SpmvPlan's "
+              ".search_result holds the SearchResult")
+    from repro.api import Target, compile as _compile  # lazy: no cycle
+    config = config or SearchConfig()
+    plan = _compile(matrix,
+                    Target(backend=config.backend,
+                           batch_size=max(config.batch_size, 1)),
+                    budget=config, cache=cache)
+    return plan.search_result

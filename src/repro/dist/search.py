@@ -17,9 +17,10 @@ import dataclasses
 from typing import Optional
 
 from repro.core.matrices import SparseMatrix
-from repro.core.search import AlphaSparseSearch, SearchConfig, SearchResult
+from repro.core.search import (ProgramCache, SearchConfig, SearchResult,
+                               run_search)
 from repro.core.graph import run_graph
-from repro.core.kernel_builder import build_spmv
+from repro.core.kernel_builder import build_program
 
 from .spmv import (RowShard, ShardedSpmvProgram, _axis_size,
                    build_sharded_spmv, default_shard_graph, partition_matrix)
@@ -46,6 +47,9 @@ class ShardedSearchConfig:
     # (a search on a near-empty shard is all compile overhead, no signal)
     min_nnz_for_search: int = 256
     backend: str = "jax"
+    # interpret=True runs backend="pallas" kernels in interpret mode inside
+    # the shard_map body (the CPU stand-in for the on-device Mosaic path)
+    interpret: bool = True
 
 
 @dataclasses.dataclass
@@ -76,10 +80,13 @@ class ShardedSearchResult:
 
 
 def dist_search(m: SparseMatrix, mesh,
-                config: Optional[ShardedSearchConfig] = None
+                config: Optional[ShardedSearchConfig] = None,
+                cache: Optional[ProgramCache] = None
                 ) -> ShardedSearchResult:
     """Partition ``m`` over the mesh and run one AlphaSparse search per
-    shard; returns the compiled sharded program plus per-shard reports."""
+    shard; returns the compiled sharded program plus per-shard reports.
+    ``cache`` memoises the per-shard searches (keyed on each shard
+    sub-matrix + its derived config)."""
     cfg = config or ShardedSearchConfig()
     n_shards = _axis_size(mesh, cfg.axis_name)
     shards = partition_matrix(m, n_shards, mode=cfg.mode, balance=cfg.balance)
@@ -94,13 +101,16 @@ def dist_search(m: SparseMatrix, mesh,
                                        seed=cfg.seed + cfg.search.seed
                                        + s.index,
                                        backend=cfg.backend)
-            res = AlphaSparseSearch(s.matrix, scfg).run()
+            res = run_search(s.matrix, scfg, cache=cache)
             programs.append(res.best_program)
             reports.append(ShardReport(s, True, res.best_graph.label(), res))
         else:
             g = default_shard_graph(s.matrix)
             meta = run_graph(s.matrix, g)
-            programs.append(build_spmv(meta, backend=cfg.backend))
+            programs.append(build_program(meta, backend=cfg.backend,
+                                          jit=False))
             reports.append(ShardReport(s, False, g.label(), None))
-    program = build_sharded_spmv(shards, programs, mesh, cfg.axis_name)
+    program = build_sharded_spmv(shards, programs, mesh, cfg.axis_name,
+                                 backend=cfg.backend,
+                                 interpret=cfg.interpret)
     return ShardedSearchResult(program=program, reports=reports)

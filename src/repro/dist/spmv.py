@@ -5,15 +5,23 @@ AlphaSparse designs a format *per matrix*; here the device mesh is one more
 level of the hardware hierarchy, so the unit of design becomes the *shard*:
 each partition may end up with a different machine-designed format (an
 irregular shard picks a SEG design while a regular shard picks ELL — see
-``dist.search``). Heterogeneous per-shard programs still compile to a single
-SPMD program: the shard_map body branches on ``lax.axis_index`` with
-``lax.switch``; every device *executes* only its own shard's kernel.
+``dist.search``).
 
-Known limitation (ROADMAP "Open items"): the per-shard format arrays are
-closed-over constants of that one SPMD program, so every device currently
-*stores* all shards' formats — compute scales with 1/N but format memory
-does not. De-duplicating storage needs per-family format stacking passed
-as sharded shard_map operands.
+Execution model (since the compile-API redesign): per-shard formats are
+**stacked per kernel family and passed as shard_map operands**, not closed
+over as jitted constants. Every shard's format is canonicalized into at
+most a handful of family groups — ``ell`` (all width buckets padded to a
+common (R, W)) and one ``seg`` group per (reduce kind, S, L) — then padded
+to the family's max tile count and stacked with a leading shard axis that
+is sharded over the mesh. Each device therefore *stores* only its own
+1/n_shards slice of every family stack (closing the ROADMAP "dist format
+memory dedup" item), and the body needs no ``lax.switch``: a device just
+runs every family kernel on its slice, where tiles belonging to other
+families are empty padding (val=0, rowmap=-1) that contributes nothing.
+The body itself is ``core.kernel_builder.build_kernel`` on a synthetic
+spec, so ``backend="pallas"`` (with ``interpret``) runs the real Pallas
+kernels inside shard_map (closing the "Pallas on-device path for dist"
+item).
 
 Two partition modes:
 
@@ -34,15 +42,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.graph import OperatorGraph, run_graph
-from repro.core.kernel_builder import SpmvProgram, build_spmv
+from repro.core.kernel_builder import (SPEC_VERSION, SpmvProgram,
+                                       build_kernel, build_program,
+                                       materialize_cols)
 from repro.core.matrices import SparseMatrix
 from repro.core.operators import OpSpec
 
 __all__ = ["RowShard", "partition_matrix", "ShardedSpmvProgram",
-           "build_sharded_spmv", "shard_map_spmv", "default_shard_graph"]
+           "build_sharded_spmv", "shard_map_spmv", "default_shard_graph",
+           "pack_operand_format"]
 
 
 def _axis_size(mesh, axis_name: str) -> int:
@@ -142,6 +153,196 @@ def default_shard_graph(m: SparseMatrix) -> OperatorGraph:
     return SEG_GRAPH if m.is_irregular() else ELL_GRAPH
 
 
+# ------------------- operand packing (per-family stacking) ------------------
+
+def _pad_to(a: np.ndarray, shape: tuple, fill) -> np.ndarray:
+    """Pad ``a`` up to ``shape`` (same rank) with a constant fill value."""
+    if tuple(a.shape) == tuple(shape):
+        return a
+    out = np.full(shape, fill, dtype=a.dtype)
+    out[tuple(slice(0, s) for s in a.shape)] = a
+    return out
+
+
+_FILL = {"vals": 0.0, "cols": 0, "rowmap": -1, "local": 0, "end": 0,
+         "rows": 0}
+
+# canonical ELL chunk geometry for operand stacking: every bucket is
+# re-tiled to (R0, W0) so heterogeneous bucket widths across shards never
+# force a pad-to-global-max blowup (wide rows split into several chunks of
+# the same output row — exact under the scatter-*add* combine)
+_ELL_R0, _ELL_W0 = 8, 8
+
+
+def _canon_ell(vals: np.ndarray, cols: np.ndarray,
+               rowmap: np.ndarray) -> dict:
+    """Re-tile one ELL bucket (T, R, W) to canonical (T', R0, W0) chunks."""
+    T, R, W = vals.shape
+    Rp = -(-R // _ELL_R0) * _ELL_R0
+    Wp = -(-W // _ELL_W0) * _ELL_W0
+    vals = _pad_to(vals, (T, Rp, Wp), 0.0)
+    cols = _pad_to(cols, (T, Rp, Wp), 0)
+    rowmap = _pad_to(rowmap, (T, Rp), -1)
+    kw, kr = Wp // _ELL_W0, Rp // _ELL_R0
+    # split the width axis: chunk (t, j) holds columns [j*W0, (j+1)*W0) of
+    # tile t's rows; every chunk scatters into the same output rows
+    vals = vals.reshape(T, Rp, kw, _ELL_W0).transpose(0, 2, 1, 3)
+    cols = cols.reshape(T, Rp, kw, _ELL_W0).transpose(0, 2, 1, 3)
+    rowmap = np.repeat(rowmap, kw, axis=0)
+    # split the row axis: a pure reshape (rows stay whole per chunk)
+    vals = vals.reshape(T * kw * kr, _ELL_R0, _ELL_W0)
+    cols = cols.reshape(T * kw * kr, _ELL_R0, _ELL_W0)
+    rowmap = rowmap.reshape(T * kw * kr, _ELL_R0)
+    return {"vals": np.ascontiguousarray(vals.astype(np.float32)),
+            "cols": np.ascontiguousarray(cols.astype(np.int32)),
+            "rowmap": np.ascontiguousarray(rowmap)}
+
+
+def _shard_family_parts(program: Optional[SpmvProgram]) -> dict:
+    """Canonicalize one shard program's (spec, fmt) into family parts.
+
+    Returns {family_key: [part, ...]} where a part is {name: np.ndarray}.
+    Family keys: ("ell",) for every width bucket (re-tiled to canonical
+    (R0, W0) chunks), and ("seg", reduce, S, L) for nnz-split blocks (the
+    flat (S, L) stream cannot be padded without shifting segment
+    descriptors, so it is part of the family identity; tile count and
+    seg_rows are paddable).
+    """
+    out: dict = {}
+    if program is None:
+        return out
+    fmt = {k: np.asarray(v) for k, v in program.fmt.items()}
+    for step in program.spec["steps"]:
+        key = step["key"]
+        vals = fmt[f"{key}_vals"]
+        cols = materialize_cols(step["cols"], fmt).astype(np.int32)
+        if step["kind"] == "ell":
+            comb = step["combine"]
+            if comb["mode"] == "rowmap":
+                rowmap = fmt[f"{key}_rowmap"].astype(np.int32)
+            else:
+                # affine combine (a == 1): reconstruct the equivalent
+                # explicit rowmap — scatter-adding to b0 + arange(nv) is
+                # exactly what the direct/affine write did.
+                T, R = vals.shape[0], vals.shape[1]
+                flat = np.full(T * R, -1, np.int32)
+                flat[: comb["nv"]] = comb["b0"] + np.arange(comb["nv"],
+                                                            dtype=np.int32)
+                rowmap = flat.reshape(T, R)
+            out.setdefault(("ell",), []).append(
+                _canon_ell(vals, cols, rowmap))
+        else:
+            S, L = int(vals.shape[1]), int(vals.shape[2])
+            fam = ("seg", step["reduce"], S, L)
+            part = {"vals": vals.astype(np.float32), "cols": cols,
+                    "rowmap": fmt[f"{key}_rowmap"].astype(np.int32)}
+            for name in ("local", "end", "rows"):
+                if f"{key}_{name}" in fmt:
+                    part[name] = fmt[f"{key}_{name}"].astype(np.int32)
+            out.setdefault(fam, []).append(part)
+    return out
+
+
+def _concat_shard_family(parts: list[dict], names: list[str],
+                         rw: Optional[tuple], seg_rows: int) -> dict:
+    """Pad each part to the family geometry and concatenate along tiles."""
+    pieces = {n: [] for n in names}
+    for part in parts:
+        T = part["vals"].shape[0]
+        for n in names:
+            a = part[n]
+            if rw is not None:                      # ell: (T, R, W) family
+                shape = ((T,) + rw if n != "rowmap" else (T, rw[0]))
+            elif n in ("rowmap", "end"):            # seg descriptor rows
+                shape = (T, seg_rows)
+            else:                                   # seg flat (S, L) stream
+                shape = a.shape
+            pieces[n].append(_pad_to(a, shape, _FILL[n]))
+    return {n: np.concatenate(pieces[n], axis=0) for n in names}
+
+
+def pack_operand_format(programs: Sequence[Optional[SpmvProgram]]
+                        ) -> tuple[list, dict]:
+    """Stack per-shard formats into per-family shard_map operands.
+
+    Returns ``(steps, stacks)``: a synthetic kernel spec step list (one
+    step per family, rowmap-scatter combine, ``n_rows = n_out``) and the
+    stacked arrays {name: (n_shards, ...)}. Shards missing a family get
+    all-padding tiles (val=0, rowmap=-1) that contribute nothing, which is
+    what removes the need for a ``lax.switch`` over per-shard branches.
+    """
+    per_shard = [_shard_family_parts(p) for p in programs]
+    families = sorted({k for sh in per_shard for k in sh})
+    steps, stacks = [], {}
+    for gi, fam in enumerate(families):
+        gkey = f"g{gi}"
+        all_parts = [part for sh in per_shard for part in sh.get(fam, [])]
+        if fam[0] == "ell":
+            names = ["vals", "cols", "rowmap"]
+            rw = (max(p["vals"].shape[1] for p in all_parts),
+                  max(p["vals"].shape[2] for p in all_parts))
+            seg_rows = 0
+            step = {"kind": "ell", "key": gkey,
+                    "cols": {"mode": "array", "key": f"{gkey}_cols"},
+                    "combine": {"mode": "rowmap", "key": f"{gkey}_rowmap"},
+                    "report": {"kernel": "ell", "family": "ell",
+                               "tile_rows": rw[0], "width": rw[1]}}
+        else:
+            _, reduce_kind, S, L = fam
+            names = sorted({n for p in all_parts for n in p})
+            rw = None
+            seg_rows = max(p["rowmap"].shape[1] for p in all_parts)
+            # stacking appends padding tiles: the gmem row stream is no
+            # longer globally sorted, so never claim the sorted fast path
+            step = {"kind": "seg", "key": gkey, "reduce": reduce_kind,
+                    "seg_rows": int(seg_rows), "rows_sorted": False,
+                    "cols": {"mode": "array", "key": f"{gkey}_cols"},
+                    "report": {"kernel": reduce_kind, "family": "seg",
+                               "chunk": (S, L), "seg_rows": int(seg_rows)}}
+        shard_arrays = [
+            _concat_shard_family(sh.get(fam, []), names, rw, seg_rows)
+            if sh.get(fam) else None
+            for sh in per_shard]
+        t_max = max(a["vals"].shape[0] for a in shard_arrays if a is not None)
+        for n in names:
+            tails = {tuple(a[n].shape[1:])
+                     for a in shard_arrays if a is not None}
+            tail = max(tails)   # singleton by construction of the family
+            full = []
+            for a in shard_arrays:
+                if a is None:
+                    full.append(np.full((t_max,) + tail, _FILL[n],
+                                        dtype=np.float32 if n == "vals"
+                                        else np.int32))
+                else:
+                    full.append(_pad_to(a[n], (t_max,) + tail, _FILL[n]))
+            stacks[f"{gkey}_{n}"] = np.stack(full)
+        steps.append(step)
+    return steps, stacks
+
+
+def stacked_call(fn: Callable, stacks: dict, x, mode: str, n_cols: int,
+                 sizes: Sequence[int], dtype=jnp.float32) -> jax.Array:
+    """Shared call path for stacked-operand programs and plans.
+
+    col mode: pad x to the uniform slice width before sharding it;
+    row mode: slice each device's padded band back to its true size.
+    """
+    x = jnp.asarray(x, dtype)
+    n_shards = max(len(sizes), 1)
+    if mode == "col":
+        width = -(-n_cols // n_shards)
+        pad = width * n_shards - n_cols
+        return fn(stacks, jnp.pad(x, ((0, pad),) + ((0, 0),)
+                                  * (x.ndim - 1)))
+    out = fn(stacks, x)          # (n_shards, R[, B]) padded row bands
+    pieces = [out[i, :size] for i, size in enumerate(sizes)]
+    return (jnp.concatenate(pieces) if pieces
+            else out[:, :0].reshape((-1,) + x.shape[1:]))
+
+
+# ------------------------------ the program --------------------------------
+
 @dataclasses.dataclass
 class ShardedSpmvProgram:
     """A compiled sharded SpMV/SpMM: y = A @ x across the mesh ``data`` axis.
@@ -150,6 +351,11 @@ class ShardedSpmvProgram:
     ``SpmvProgram``) and runs the per-shard *fused SpMM* kernels inside the
     same shard_map — row mode concatenates (size, B) bands, col mode psums
     (n_rows, B) partials exactly like the 1-RHS combine.
+
+    ``stacks`` (per-family stacked format arrays, leading dim sharded over
+    the mesh axis) and ``steps`` (the synthetic kernel spec the shard_map
+    body interprets) fully determine the executable — the same plan
+    protocol as ``SpmvProgram``, which is what ``repro.api`` serializes.
     """
 
     # explicit batching protocol shared with SpmvProgram (see
@@ -163,8 +369,12 @@ class ShardedSpmvProgram:
     programs: list[Optional[SpmvProgram]]
     mesh: object
     axis_name: str
+    steps: list = dataclasses.field(default_factory=list)
+    stacks: dict = dataclasses.field(default_factory=dict)
+    band_rows: int = 0               # row mode: padded per-device band size
+    backend: str = "jax"
+    interpret: bool = True
     _fn: Callable = dataclasses.field(repr=False, default=None)
-    _fn_batched: Callable = dataclasses.field(repr=False, default=None)
 
     @property
     def nnz(self) -> int:
@@ -173,6 +383,19 @@ class ShardedSpmvProgram:
     @property
     def stored_bytes(self) -> int:
         return sum(p.stored_bytes for p in self.programs if p is not None)
+
+    @property
+    def replicated_format_bytes(self) -> int:
+        """Per-device format bytes under the old closure design: every
+        device held every shard's format as baked-in jit constants."""
+        return self.stored_bytes
+
+    @property
+    def per_device_format_bytes(self) -> int:
+        """Per-device format bytes under operand passing: the device's
+        1/n_shards slice of every family stack."""
+        n = max(len(self.shards), 1)
+        return sum(v.nbytes // n for v in self.stacks.values())
 
     def descriptor(self) -> list[dict]:
         out = []
@@ -185,22 +408,58 @@ class ShardedSpmvProgram:
 
     def __call__(self, x) -> jax.Array:
         """x: (n_cols,) -> (n_rows,), or (n_cols, B) -> (n_rows, B)."""
-        x = jnp.asarray(x, jnp.float32)
-        fn = self._fn_batched if x.ndim == 2 else self._fn
-        if self.mode == "col":
-            width = -(-self.n_cols // len(self.shards))
-            pad = width * len(self.shards) - self.n_cols
-            return fn(jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)))
-        out = fn(x)  # (n_shards, R[, B]) padded row bands
-        pieces = [out[i, : s.size] for i, s in enumerate(self.shards)]
-        return (jnp.concatenate(pieces) if pieces
-                else out[:, :0].reshape((-1,) + x.shape[1:]))
+        return stacked_call(self._fn, self.stacks, x, self.mode,
+                            self.n_cols, [s.size for s in self.shards])
+
+
+def make_stacked_fn(steps: list, mode: str, n_out: int, mesh,
+                    axis_name: str, backend: str = "jax",
+                    interpret: bool = True) -> Callable:
+    """Jitted shard_map over the stacked-operand body.
+
+    The body is a generated kernel (``build_kernel``) over the device's
+    slice of each family stack; format arrays arrive as sharded operands,
+    so nothing is baked into the executable as per-device constants.
+    """
+    run = build_kernel({"version": SPEC_VERSION, "n_rows": n_out,
+                        "steps": steps},
+                       backend=backend, interpret=interpret)
+
+    def body(stacks, x):
+        fmt = {k: v[0] for k, v in stacks.items()}
+        y = run(fmt, x)
+        if mode == "col":
+            # the COL_DIV combine step: sum per-slice partial products —
+            # identical for (n_rows,) and (n_rows, B) partials
+            return jax.lax.psum(y, axis_name)
+        return y[None]
+
+    def specs_for(stacks):
+        return {k: P(axis_name) for k in stacks}
+
+    x_spec = P(axis_name) if mode == "col" else P(None)
+    out_spec = P(None) if mode == "col" else P(axis_name)
+
+    def fn(stacks, x):
+        mapped = shard_map(body, mesh=mesh,
+                           in_specs=(specs_for(stacks), x_spec),
+                           out_specs=out_spec, check_rep=False)
+        return mapped(stacks, x)
+
+    return jax.jit(fn)
 
 
 def build_sharded_spmv(shards: Sequence[RowShard],
                        programs: Sequence[Optional[SpmvProgram]],
-                       mesh, axis_name: str = "data") -> ShardedSpmvProgram:
-    """Compile per-shard programs into one SPMD shard_map program."""
+                       mesh, axis_name: str = "data",
+                       backend: str = "jax",
+                       interpret: bool = True) -> ShardedSpmvProgram:
+    """Compile per-shard programs into one SPMD stacked-operand program.
+
+    ``backend``/``interpret`` select the kernels the shard_map body runs
+    (``"pallas"`` + ``interpret=True`` is the CPU stand-in for the
+    on-device Mosaic path).
+    """
     shards = list(shards)
     programs = list(programs)
     n_shards = _axis_size(mesh, axis_name)
@@ -212,66 +471,30 @@ def build_sharded_spmv(shards: Sequence[RowShard],
         n_rows = shards[-1].stop if shards else 0
         n_cols = shards[0].matrix.n_cols if shards else 0
         R = max((s.size for s in shards), default=0)
-
-        def branch(prog, size):
-            def run(x):
-                # x: (n_cols,) or (n_cols, B); programs dispatch on ndim
-                rhs = x.shape[1:]
-                if prog is None:
-                    return jnp.zeros((1, R) + rhs, jnp.float32)
-                y = prog(x).astype(jnp.float32)
-                pad = ((0, R - size),) + ((0, 0),) * len(rhs)
-                return jnp.pad(y, pad)[None]
-            return run
-
-        branches = [branch(p, s.size) for p, s in zip(programs, shards)]
-
-        def body(x):
-            return jax.lax.switch(jax.lax.axis_index(axis_name), branches, x)
-
-        def make_fn(batched):
-            extra = (None,) if batched else ()
-            return jax.jit(shard_map(
-                body, mesh=mesh, in_specs=P(None, *extra),
-                out_specs=P(axis_name, None, *extra), check_rep=False))
+        n_out = R
     else:
         n_rows = shards[0].matrix.n_rows if shards else 0
         n_cols = shards[-1].stop if shards else 0
-
-        def branch(prog, w):
-            def run(x_local):
-                rhs = x_local.shape[1:]
-                if prog is None:
-                    return jnp.zeros((n_rows,) + rhs, jnp.float32)
-                return prog(x_local[:w]).astype(jnp.float32)
-            return run
-
-        branches = [branch(p, s.matrix.n_cols)
-                    for p, s in zip(programs, shards)]
-
-        def body(x_local):
-            y = jax.lax.switch(jax.lax.axis_index(axis_name), branches,
-                               x_local)
-            # the COL_DIV combine step: sum per-slice partial products —
-            # identical for (n_rows,) and (n_rows, B) partials
-            return jax.lax.psum(y, axis_name)
-
-        def make_fn(batched):
-            extra = (None,) if batched else ()
-            return jax.jit(shard_map(
-                body, mesh=mesh, in_specs=P(axis_name, *extra),
-                out_specs=P(None, *extra), check_rep=False))
+        R = 0
+        n_out = n_rows
+    steps, host_stacks = pack_operand_format(programs)
+    sharding = NamedSharding(mesh, P(axis_name))
+    stacks = {k: jax.device_put(v, sharding) for k, v in host_stacks.items()}
+    fn = make_stacked_fn(steps, mode, n_out, mesh, axis_name,
+                         backend=backend, interpret=interpret)
     return ShardedSpmvProgram(n_rows=n_rows, n_cols=n_cols, mode=mode,
                               shards=shards, programs=programs, mesh=mesh,
-                              axis_name=axis_name, _fn=make_fn(False),
-                              _fn_batched=make_fn(True))
+                              axis_name=axis_name, steps=steps,
+                              stacks=stacks, band_rows=R, backend=backend,
+                              interpret=interpret, _fn=fn)
 
 
 def shard_map_spmv(m: SparseMatrix, mesh, axis_name: str = "data",
                    mode: str = "row", balance: str = "nnz",
                    graph_for: Callable[[SparseMatrix], OperatorGraph]
                    = default_shard_graph,
-                   backend: str = "jax") -> ShardedSpmvProgram:
+                   backend: str = "jax",
+                   interpret: bool = True) -> ShardedSpmvProgram:
     """Search-free sharded SpMV: partition + per-shard heuristic design.
 
     ``dist.search.dist_search`` is the searched variant (one AlphaSparse
@@ -285,5 +508,7 @@ def shard_map_spmv(m: SparseMatrix, mesh, axis_name: str = "data",
             programs.append(None)
         else:
             meta = run_graph(s.matrix, graph_for(s.matrix))
-            programs.append(build_spmv(meta, backend=backend))
-    return build_sharded_spmv(shards, programs, mesh, axis_name)
+            # jit=False: only the packed fmt + spec feed the stacked body
+            programs.append(build_program(meta, backend=backend, jit=False))
+    return build_sharded_spmv(shards, programs, mesh, axis_name,
+                              backend=backend, interpret=interpret)

@@ -1,0 +1,21 @@
+"""Version-compat shims for jax's AOT introspection APIs.
+
+``Compiled.cost_analysis()`` has drifted across jax releases: depending on
+version (and backend) it returns a ``dict``, a one-element ``[dict]``, or
+``None``. Every consumer must normalize or it breaks on the next jax bump
+(ROADMAP "latent cost_analysis() shape drift"). This helper is the single
+place that knows about the drift; ``launch.dryrun`` and
+``repro.SpmvPlan.cost_analysis()`` both go through it.
+"""
+from __future__ import annotations
+
+__all__ = ["normalize_cost_analysis"]
+
+
+def normalize_cost_analysis(ca) -> dict:
+    """Collapse ``dict | [dict] | () | None`` to a plain dict."""
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)

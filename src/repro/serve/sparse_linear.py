@@ -2,19 +2,21 @@
 
 This is the paper's technique as a *first-class framework feature*
 (DESIGN.md §4): a magnitude-pruned linear layer's decode-time matvec
-``y = W_sparse @ x`` is exactly SpMV. ``sparsify_linear`` prunes a dense
-weight, runs the AlphaSparse search offline (the paper's "extremely
-optimized library generator" usage, §III), and returns a layer whose
-forward pass calls the machine-designed program.
+``y = W_sparse @ x`` is exactly SpMV. The recommended path prunes a dense
+weight and compiles it through the one compile API::
+
+    plan = repro.compile(prune_magnitude(w, 0.1), target, budget=...)
+    layer = SparseLinear.from_plan(plan)
+
+``sparsify_linear`` / ``sparsify_linear_sharded`` remain as deprecated
+one-call shims over that path.
 
 For batched decode (B small), the layer hands the whole activation batch
-to the program's fused multi-RHS (SpMM) path: the (B, n_cols) batch is
-transposed to the program's (n_cols, B) tile convention, the format
-arrays stream once for all B columns, and the result transposes back to
-(B, n_rows). Programs advertise this with ``supports_batch = True`` (an
-explicit protocol on both dense ``SpmvProgram`` and sharded
-``ShardedSpmvProgram``); unknown program types fall back to a vmap over
-the 1-RHS path.
+to the plan's fused multi-RHS (SpMM) path: the (B, n_cols) batch is
+transposed to the plan's (n_cols, B) tile convention, the format arrays
+stream once for all B columns, and the result transposes back to
+(B, n_rows). Plans/programs advertise this with ``supports_batch = True``;
+unknown program types fall back to a vmap over the 1-RHS path.
 """
 from __future__ import annotations
 
@@ -24,8 +26,8 @@ from typing import Optional
 import jax
 import numpy as np
 
-from repro.core import (ProgramCache, SearchConfig, SparseMatrix,
-                        build_spmv, run_graph, search)
+from repro.core import ProgramCache, SearchConfig, SparseMatrix
+from repro.core.deprecation import warn_once
 from repro.core.graph import OperatorGraph
 from repro.core.operators import OpSpec
 
@@ -49,9 +51,16 @@ class SparseLinear:
     """y = A @ x with A in an AlphaSparse machine-designed format."""
 
     matrix: SparseMatrix
-    graph: OperatorGraph
-    program: object            # SpmvProgram
+    graph: Optional[OperatorGraph]
+    program: object            # SpmvPlan | SpmvProgram | ShardedSpmvPlan
     search_gflops: Optional[float] = None
+
+    @classmethod
+    def from_plan(cls, plan, matrix: Optional[SparseMatrix] = None
+                  ) -> "SparseLinear":
+        """Wrap a compiled ``repro.SpmvPlan`` as a serving layer."""
+        return cls(matrix, getattr(plan, "graph", None), plan,
+                   getattr(plan, "search_gflops", None))
 
     def __call__(self, x: jax.Array) -> jax.Array:
         """x: (n_cols,) or (B, n_cols) -> (n_rows,) or (B, n_rows)."""
@@ -79,7 +88,7 @@ def sparsify_linear(w: np.ndarray, density: float = 0.1,
                     search_config: Optional[SearchConfig] = None,
                     do_search: bool = True,
                     cache: Optional[ProgramCache] = None) -> SparseLinear:
-    """Prune a dense weight and generate its SpMV program.
+    """Deprecated shim: prune + ``repro.compile`` + ``SparseLinear``.
 
     do_search=False skips the (minutes-long) AlphaSparse search and uses a
     sensible default graph — handy in tests; production path searches.
@@ -87,34 +96,44 @@ def sparsify_linear(w: np.ndarray, density: float = 0.1,
     serving restarts reuse a prior search for the same pruned weight; set
     ``search_config.batch_size`` to the serving decode batch so the design
     is tuned for the fused multi-RHS path."""
+    warn_once("sparsify_linear",
+              "sparsify_linear is deprecated; use repro.compile("
+              "prune_magnitude(w, density), target) and "
+              "SparseLinear.from_plan(plan)")
+    from repro.api import Target, compile as _compile
     m = prune_magnitude(np.asarray(w), density)
     if do_search:
-        res = search(m, search_config or SearchConfig(max_seconds=30,
-                                                      max_structures=8),
-                     cache=cache)
-        return SparseLinear(m, res.best_graph, res.best_program,
-                            res.gflops)
-    meta = run_graph(m, _DEFAULT_GRAPH)
-    return SparseLinear(m, _DEFAULT_GRAPH, build_spmv(meta))
+        cfg = search_config or SearchConfig(max_seconds=30, max_structures=8)
+        plan = _compile(m, Target(backend=cfg.backend,
+                                  batch_size=max(cfg.batch_size, 1)),
+                        budget=cfg, cache=cache)
+        return SparseLinear(m, plan.graph, plan, plan.search_gflops)
+    plan = _compile(m, Target(), graph=_DEFAULT_GRAPH)
+    return SparseLinear(m, _DEFAULT_GRAPH, plan)
 
 
 def sparsify_linear_sharded(w: np.ndarray, mesh, density: float = 0.1,
                             do_search: bool = False,
                             dist_config=None) -> SparseLinear:
-    """Sharded variant: the pruned weight is row-partitioned over the
-    mesh's ``data`` axis and each shard gets its own design (heuristic by
-    default; ``do_search=True`` runs one AlphaSparse search per shard).
+    """Deprecated shim: prune + sharded ``repro.compile``.
 
-    The returned layer's program is a ``ShardedSpmvProgram`` — one SPMD
-    shard_map program whose per-device branch runs that shard's kernel.
+    The pruned weight is partitioned over the mesh's ``data`` axis and
+    each shard gets its own design (heuristic by default; ``do_search=True``
+    runs one AlphaSparse search per shard). The returned layer's program is
+    a sharded plan — one SPMD shard_map program whose per-family stacked
+    formats are sharded operands (1/n_shards stored per device).
     """
-    from repro.dist.search import ShardedSearchConfig, dist_search
-    from repro.dist.spmv import shard_map_spmv
+    warn_once("sparsify_linear_sharded",
+              "sparsify_linear_sharded is deprecated; use repro.compile("
+              "prune_magnitude(w, density), Target(mesh=mesh)) and "
+              "SparseLinear.from_plan(plan)")
+    from repro.api import Target, compile as _compile
+    from repro.dist.search import ShardedSearchConfig
 
     m = prune_magnitude(np.asarray(w), density)
     cfg = dist_config or ShardedSearchConfig()
-    if do_search:
-        return SparseLinear(m, None, dist_search(m, mesh, cfg).program)
-    return SparseLinear(m, None, shard_map_spmv(
-        m, mesh, axis_name=cfg.axis_name, mode=cfg.mode,
-        balance=cfg.balance, backend=cfg.backend))
+    target = Target(backend=cfg.backend, interpret=cfg.interpret, mesh=mesh,
+                    axis_name=cfg.axis_name, partition=cfg.mode,
+                    balance=cfg.balance)
+    plan = _compile(m, target, budget=cfg if do_search else None)
+    return SparseLinear(m, None, plan)

@@ -217,6 +217,10 @@ for name, m in cases.items():
                               else "nnz")
         y = np.asarray(prog(x))
         rec[mode] = float(np.abs(y - oracle).max() / scale)
+        # operand-passing dedup: per-device bytes must undercut the
+        # closure-replication baseline on the non-degenerate matrices
+        rec[mode + "_dedup"] = (prog.replicated_format_bytes
+                                / max(prog.per_device_format_bytes, 1))
     out[name] = rec
 print(json.dumps(out))
 """
@@ -231,5 +235,8 @@ def test_shard_map_spmv_8_fake_devices():
     assert res.returncode == 0, res.stderr[-2000:]
     errs = json.loads(res.stdout.strip().splitlines()[-1])
     for name, rec in errs.items():
-        for mode, rel_err in rec.items():
-            assert rel_err < 1e-4, (name, mode, rel_err)
+        for mode in ("row", "col"):
+            assert rec[mode] < 1e-4, (name, mode, rec[mode])
+            if name in ("regular", "powerlaw"):   # real-sized matrices
+                assert rec[mode + "_dedup"] > 1.2, \
+                    (name, mode, rec[mode + "_dedup"])
