@@ -1,0 +1,124 @@
+"""Search-policy axis: compare SearchStrategies on the 4 matrix families.
+
+The design space is fixed; the *policy* walking it (anneal | grid |
+cost_model — the ``repro.design`` SearchStrategy protocol) is the
+variable. For each family x strategy this times a full search under the
+same budget and reports candidates evaluated, wall seconds, and the best
+GFLOP/s found, so the search-policy axis shows up in the perf trajectory
+(``BENCH_search.json``).
+
+Schema: ``{scale, budget_seconds, families: {name: {strategy:
+{gflops, best_seconds, n_evaluations, n_structures, wall_seconds,
+design}}}, winners: {name: strategy}}``.
+
+``--smoke`` runs tiny matrices under a wall-clock guard (CI): exit 3 on
+guard breach, exit 1 if any strategy fails to produce a valid program.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from repro.core.matrices import (banded_matrix, hyb_friendly_matrix,
+                                 powerlaw_matrix, random_uniform_matrix)
+from repro.core.search import SearchConfig, run_search
+
+try:                      # runnable as module (-m benchmarks.strategy_compare)
+    from .common import SCALE, emit
+except ImportError:       # ... or as a plain script from the repo root
+    from common import SCALE, emit
+
+STRATEGIES = ("anneal", "grid", "cost_model")
+SMOKE_WALL_SECONDS = 300.0   # --smoke guard: CI fails loudly on a hang
+
+
+def families(smoke: bool) -> dict:
+    if smoke:
+        n = 192
+        return {
+            "banded": banded_matrix(n, 3, seed=1),
+            "uniform": random_uniform_matrix(n, n, 6.0 / n, seed=2),
+            "powerlaw": powerlaw_matrix(n, n, 6.0, 1.2, seed=3),
+            "hyb": hyb_friendly_matrix(n, 5, max(n // 64, 2), 60, seed=4),
+        }
+    s = {"quick": 1, "full": 4}.get(SCALE, 1)
+    n = 512 * s
+    return {
+        "banded": banded_matrix(n, 4, seed=1),
+        "uniform": random_uniform_matrix(n, n, 8.0 / n, seed=2),
+        "powerlaw": powerlaw_matrix(n, n, 8.0, 1.2, seed=3),
+        "hyb": hyb_friendly_matrix(n, 6, max(n // 96, 3), 80, seed=4),
+    }
+
+
+def budget(smoke: bool) -> SearchConfig:
+    if smoke:
+        return SearchConfig(max_seconds=8, max_structures=3,
+                            coarse_samples=2, fine_top_structures=2,
+                            fine_eval_budget=2, timing_repeats=1, seed=0)
+    return SearchConfig(max_seconds=45, max_structures=10, coarse_samples=4,
+                        fine_eval_budget=6, timing_repeats=2, seed=0)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny matrices + wall-clock guard (CI)")
+    ap.add_argument("--out", default=None,
+                    help="output json (default: <repo>/BENCH_search.json)")
+    args = ap.parse_args(argv)
+
+    t_start = time.time()
+    cfg = budget(args.smoke)
+    fams = families(args.smoke)
+    out = {"scale": "smoke" if args.smoke else SCALE,
+           "budget_seconds": cfg.max_seconds, "families": {}, "winners": {}}
+    failures = 0
+
+    for name, m in fams.items():
+        per = {}
+        for strat in STRATEGIES:
+            t0 = time.perf_counter()
+            try:
+                res = run_search(m, cfg, strategy=strat)
+            except RuntimeError as e:
+                emit(f"strategy.{name}.{strat}", 0.0, f"FAILED:{e}")
+                failures += 1
+                continue
+            wall = time.perf_counter() - t0
+            per[strat] = {"gflops": res.gflops,
+                          "best_seconds": res.best_seconds,
+                          "n_evaluations": res.n_evaluations,
+                          "n_structures": res.n_structures,
+                          "wall_seconds": wall,
+                          "design": res.best_graph.label()}
+            emit(f"strategy.{name}.{strat}", res.best_seconds * 1e6,
+                 f"gflops={res.gflops:.3f};evals={res.n_evaluations};"
+                 f"wall_s={wall:.1f}")
+        out["families"][name] = per
+        if per:
+            out["winners"][name] = max(per, key=lambda s: per[s]["gflops"])
+
+    wall_total = time.time() - t_start
+    out["wall_seconds_total"] = wall_total
+    path = Path(args.out) if args.out else (
+        Path(__file__).resolve().parent.parent / "BENCH_search.json")
+    path.write_text(json.dumps(out, indent=1))
+    emit("strategy.summary", wall_total * 1e6,
+         f"winners={';'.join(f'{k}:{v}' for k, v in out['winners'].items())}")
+    print(f"wrote {path} ({wall_total:.1f}s total)")
+
+    if failures:
+        return 1
+    if args.smoke and wall_total > SMOKE_WALL_SECONDS:
+        print(f"SMOKE GUARD BREACH: {wall_total:.1f}s > "
+              f"{SMOKE_WALL_SECONDS:.0f}s")
+        return 3
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

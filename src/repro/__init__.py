@@ -9,6 +9,12 @@ Public surface (the one compile API)::
     plan.save("matrix.plan.npz")
     plan2 = repro.SpmvPlan.load("matrix.plan.npz")
 
+The design space is open (``repro.design``): register out-of-tree
+operators with ``@repro.design.register_operator`` and pick the search
+policy with ``repro.compile(..., strategy="anneal" | "grid" |
+"cost_model" | <SearchStrategy>)`` — see docs/API.md "Extending
+AlphaSparse".
+
 Attribute access is lazy (PEP 562): ``import repro`` imports neither jax
 nor numpy, so launchers (``repro.launch.dryrun``, benchmarks) can still
 set ``XLA_FLAGS`` before the first jax import.
@@ -31,16 +37,30 @@ _EXPORTS = {
     "SearchResult": "repro.core.search",
     "ProgramCache": "repro.core.search",
     "run_search": "repro.core.search",
+    # the pluggable design space (repro.design)
+    "design": None,                     # submodule, imported lazily
+    "register_operator": "repro.design.registry",
+    "unregister_operator": "repro.design.registry",
+    "Operator": "repro.design.registry",
+    "OpSpec": "repro.design.registry",
+    "DesignSpace": "repro.design.space",
+    "SearchStrategy": "repro.design.strategies",
+    "AnnealStrategy": "repro.design.strategies",
+    "GridStrategy": "repro.design.strategies",
+    "CostModelGuidedStrategy": "repro.design.strategies",
+    "register_strategy": "repro.design.strategies",
 }
 
 __all__ = sorted(_EXPORTS)
 
 
 def __getattr__(name):
-    module = _EXPORTS.get(name)
-    if module is None:
+    if name not in _EXPORTS:
         raise AttributeError(f"module 'repro' has no attribute {name!r}")
     import importlib
+    module = _EXPORTS[name]
+    if module is None:                  # submodule export (repro.design)
+        return importlib.import_module(f"repro.{name}")
     return getattr(importlib.import_module(module), name)
 
 

@@ -30,6 +30,7 @@ import dataclasses
 import functools
 import hashlib
 import json
+import math
 from pathlib import Path
 from typing import Optional, Union
 
@@ -112,7 +113,7 @@ def _dense_kernel(spec_json: str, backend: str, interpret: bool):
     return jax.jit(build_kernel(spec, backend=backend, interpret=interpret))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class SpmvPlan:
     """A compiled (single-mesh-less) SpMV/SpMM program artifact.
 
@@ -250,7 +251,7 @@ def _sharded_fn(steps_json: str, mode: str, n_out: int, mesh, axis_name: str,
                            axis_name, backend=backend, interpret=interpret)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class ShardedSpmvPlan:
     """A compiled sharded plan: per-family stacked format arrays (leaves,
     leading dim sharded over the mesh axis) + static shard geometry.
@@ -408,6 +409,14 @@ def load_plan(path, mesh=None) -> Union[SpmvPlan, ShardedSpmvPlan]:
         stacks = {k[len("stack::"):]: z[k]
                   for k in z.files if k.startswith("stack::")}
         if mesh is not None:
+            n_saved = len(header["bounds"])
+            n_mesh = dict(mesh.shape).get(target.axis_name)
+            if n_mesh != n_saved:
+                raise ValueError(
+                    f"plan {path} was compiled for {n_saved} shards but the "
+                    f"attached mesh has {n_mesh} devices on axis "
+                    f"{target.axis_name!r}; re-compile for this mesh or "
+                    "attach a matching one")
             from jax.sharding import NamedSharding, PartitionSpec as P
             sharding = NamedSharding(mesh, P(target.axis_name))
             stacks = {k: jax.device_put(v, sharding)
@@ -452,6 +461,7 @@ def _plan_from_program(prog, graph: Optional[OperatorGraph],
 
 def compile(matrix: SparseMatrix, target: Optional[Target] = None,
             budget=None, *, graph: Optional[OperatorGraph] = None,
+            strategy=None, warm_start=None,
             cache: Optional[ProgramCache] = None,
             store: Optional["PlanStore"] = None
             ) -> Union[SpmvPlan, ShardedSpmvPlan]:
@@ -464,7 +474,19 @@ def compile(matrix: SparseMatrix, target: Optional[Target] = None,
       ``budget=None``, shards take the search-free heuristic design.
     * ``graph`` — skip the search entirely and design with this Operator
       Graph (sharded targets apply it per shard).
-    * ``cache`` — a ``ProgramCache`` memoising raw search results.
+    * ``strategy`` — the search policy walking the design space: a
+      ``repro.design.SearchStrategy`` instance/class or a registered name
+      ("anneal" | "grid" | "cost_model"). None = ``AnnealStrategy``, the
+      historical SA walk (behavioral parity). Sharded targets pass the
+      strategy to every per-shard search (no-op with ``budget=None``,
+      where shards take the search-free heuristic design).
+    * ``warm_start`` — optional iterable of ``OperatorGraph`` objects timed
+      before the strategy's walk (dense targets only; per-shard searches
+      ignore it). With a ``store`` given and no explicit warm start,
+      ``store.suggest(matrix)`` (statistics-keyed nearest stored plan)
+      seeds the search automatically.
+    * ``cache`` — a ``ProgramCache`` memoising raw search results (keyed
+      by matrix, budget AND strategy).
     * ``store`` — a :class:`PlanStore`; a prior plan for the same
       (matrix, budget, target) is loaded instead of recompiled, and new
       plans are saved. Store hits carry no ``search_result`` (the full
@@ -473,9 +495,14 @@ def compile(matrix: SparseMatrix, target: Optional[Target] = None,
     """
     target = target or Target()
     if store is not None:
-        hit = store.get(matrix, target, budget, graph)
+        hit = store.get(matrix, target, budget, graph, strategy)
         if hit is not None:
             return hit
+        if warm_start is None and graph is None and target.mesh is None:
+            # statistics-keyed warm start from the nearest stored plan
+            # (dense targets only: per-shard warm-start is future work)
+            suggested = store.suggest(matrix)
+            warm_start = (suggested,) if suggested is not None else None
 
     if target.mesh is None:
         if graph is not None:
@@ -485,7 +512,8 @@ def compile(matrix: SparseMatrix, target: Optional[Target] = None,
             plan = _plan_from_program(prog, graph, target)
         else:
             cfg = _as_search_config(budget, target)
-            res = run_search(matrix, cfg, cache=cache)
+            res = run_search(matrix, cfg, cache=cache, strategy=strategy,
+                             warm_start=warm_start)
             plan = _plan_from_program(res.best_program, res.best_graph,
                                       target, search_result=res)
     else:
@@ -515,6 +543,8 @@ def compile(matrix: SparseMatrix, target: Optional[Target] = None,
                     budget, axis_name=target.axis_name,
                     mode=target.partition, balance=target.balance,
                     backend=target.backend, interpret=target.interpret)
+                if strategy is not None:
+                    dcfg = dataclasses.replace(dcfg, strategy=strategy)
             else:
                 dcfg = ShardedSearchConfig(axis_name=target.axis_name,
                                            mode=target.partition,
@@ -522,7 +552,8 @@ def compile(matrix: SparseMatrix, target: Optional[Target] = None,
                                            search=_as_search_config(
                                                budget, target),
                                            backend=target.backend,
-                                           interpret=target.interpret)
+                                           interpret=target.interpret,
+                                           strategy=strategy)
             search_result = dist_search(matrix, target.mesh, dcfg,
                                         cache=cache)
             sprog = search_result.program
@@ -530,20 +561,55 @@ def compile(matrix: SparseMatrix, target: Optional[Target] = None,
                                             search_result=search_result)
 
     if store is not None:
-        store.put(matrix, target, budget, graph, plan)
+        store.put(matrix, target, budget, graph, plan, strategy)
     return plan
 
 
 # -------------------------------- PlanStore ---------------------------------
 
+def _matrix_stats(matrix: SparseMatrix) -> list[float]:
+    """Statistics key for nearest-plan lookup: size + row-length shape.
+
+    The features are the ones the §VI-B pruning rules key on: row count,
+    mean/std of nnz per row, and the row-length coefficient of variation
+    (irregularity). Two matrices close in this space tend to get the same
+    winning design, which is what makes the stored graph a useful warm
+    start for *any* strategy."""
+    lengths = np.bincount(np.asarray(matrix.rows, np.int64),
+                          minlength=matrix.n_rows).astype(np.float64)
+    mean = float(lengths.mean()) if lengths.size else 0.0
+    std = float(lengths.std()) if lengths.size else 0.0
+    cv = std / mean if mean > 0 else 0.0
+    return [float(matrix.n_rows), mean, std, cv]
+
+
+def _stats_distance(a, b) -> float:
+    """Scale-normalized distance: log-scale for counts, linear for CV."""
+    d = 0.0
+    d += (np.log10(1.0 + a[0]) - np.log10(1.0 + b[0])) ** 2
+    d += (np.log10(1.0 + a[1]) - np.log10(1.0 + b[1])) ** 2
+    d += (np.log10(1.0 + a[2]) - np.log10(1.0 + b[2])) ** 2
+    d += (a[3] - b[3]) ** 2
+    return float(np.sqrt(d))
+
+
 class PlanStore:
-    """A directory of saved plans keyed by (matrix, budget/graph, Target).
+    """A directory of saved plans keyed by (matrix, budget/graph, strategy,
+    Target).
 
     Supersedes ``ProgramCache``'s replay-only disk entries: where the
     program cache stores the winning *graph* and re-runs the Designer +
     kernel builder on a hit, the plan store round-trips the full artifact
     (spec + format arrays) — a hit is a load, bit-identical to the saved
     plan, with no matrix or Designer replay required.
+
+    Beyond exact hits, the store answers :meth:`suggest` — a statistics-
+    keyed nearest-plan lookup (first step of the ROADMAP "autotune cache
+    keyed on matrix statistics" item): each ``put`` writes a small
+    ``.stats.json`` sidecar (matrix row statistics + winning graph), and
+    ``suggest(matrix)`` returns the stored winning ``OperatorGraph`` of
+    the statistically closest plan, which ``repro.compile`` uses to
+    warm-start the search.
     """
 
     def __init__(self, cache_dir):
@@ -553,7 +619,8 @@ class PlanStore:
 
     @staticmethod
     def key(matrix: SparseMatrix, target: Target, budget=None,
-            graph: Optional[OperatorGraph] = None) -> str:
+            graph: Optional[OperatorGraph] = None, strategy=None) -> str:
+        from repro.design.strategies import make_strategy
         mfp = ProgramCache.matrix_fingerprint(matrix)
         if graph is not None:
             bkey = "g" + hashlib.sha1(json.dumps(
@@ -566,19 +633,67 @@ class PlanStore:
             bkey = hashlib.sha1(blob.encode()).hexdigest()[:8]
         else:
             bkey = f"s{float(budget):g}"
+        if graph is None:
+            # the strategy identity is part of the key (same collision
+            # rule as ProgramCache): a grid-searched plan must not serve
+            # an anneal-searched request for the same matrix/budget
+            bkey += "-" + hashlib.sha1(
+                make_strategy(strategy).key().encode()).hexdigest()[:8]
         return f"{mfp}-{bkey}-{target.key()}"
 
     def _path(self, key: str) -> Path:
         return self.cache_dir / f"{key}.plan.npz"
 
-    def get(self, matrix, target, budget=None, graph=None):
-        path = self._path(self.key(matrix, target, budget, graph))
+    def get(self, matrix, target, budget=None, graph=None, strategy=None):
+        path = self._path(self.key(matrix, target, budget, graph, strategy))
         if not path.exists():
             self.misses += 1
             return None
+        try:
+            plan = load_plan(path, mesh=target.mesh)
+        except Exception as e:  # truncated/corrupt npz: recompile, like
+            import warnings     # ProgramCache, instead of failing forever
+            warnings.warn(f"plan store entry {path} unusable ({e!r}); "
+                          "recompiling", RuntimeWarning)
+            self.misses += 1
+            return None
         self.hits += 1
-        return load_plan(path, mesh=target.mesh)
+        return plan
 
-    def put(self, matrix, target, budget, graph, plan) -> None:
+    def put(self, matrix, target, budget, graph, plan,
+            strategy=None) -> None:
         self.cache_dir.mkdir(parents=True, exist_ok=True)
-        plan.save(self._path(self.key(matrix, target, budget, graph)))
+        key = self.key(matrix, target, budget, graph, strategy)
+        plan.save(self._path(key))
+        graph_json = getattr(plan, "graph_json", None)
+        if graph_json is not None:
+            sidecar = {"stats": _matrix_stats(matrix),
+                       "graph": json.loads(graph_json),
+                       "gflops": getattr(plan, "search_gflops", None)}
+            (self.cache_dir / f"{key}.stats.json").write_text(
+                json.dumps(sidecar))
+
+    def suggest(self, matrix: SparseMatrix,
+                max_distance: float = 1.0) -> Optional[OperatorGraph]:
+        """Winning graph of the statistically nearest stored plan.
+
+        Returns None when the store is empty or nothing is within
+        ``max_distance`` in normalized statistics space. The returned
+        graph warm-starts any strategy (``repro.compile(...,
+        warm_start=[g])``); it is *timed like any other candidate*, so a
+        bad suggestion costs one evaluation, never correctness."""
+        if not self.cache_dir.is_dir():
+            return None
+        want = _matrix_stats(matrix)
+        best_d, best_graph = math.inf, None
+        for sidecar in sorted(self.cache_dir.glob("*.stats.json")):
+            try:
+                payload = json.loads(sidecar.read_text())
+                d = _stats_distance(want, payload["stats"])
+                if d < best_d:
+                    best_d, best_graph = d, payload["graph"]
+            except (OSError, ValueError, KeyError, IndexError):
+                continue
+        if best_graph is None or best_d > max_distance:
+            return None
+        return _graph_from_jsonable(best_graph)

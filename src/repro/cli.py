@@ -4,6 +4,7 @@ The console-script face of the one compile API::
 
     repro-compile --mtx matrix.mtx --out matrix.plan.npz --seconds 60
     repro-compile --demo --no-search --batch 8 --out demo.plan.npz
+    repro-compile --demo --strategy grid --seconds 10 --out demo.plan.npz
 
 Compiles the matrix (AlphaSparse search, or the heuristic design with
 ``--no-search``), saves the plan, reloads it, verifies the loaded plan is
@@ -34,6 +35,10 @@ def _build_parser() -> argparse.ArgumentParser:
                     help="search budget in seconds")
     ap.add_argument("--no-search", action="store_true",
                     help="skip the search; use the heuristic design")
+    ap.add_argument("--strategy", default="anneal",
+                    help="search policy walking the design space: a name "
+                         "registered with repro.design.register_strategy "
+                         "(shipped: anneal | grid | cost_model)")
     ap.add_argument("--repeats", type=int, default=5,
                     help="timing repeats for the benchmark")
     return ap
@@ -61,10 +66,12 @@ def main(argv=None) -> int:
         plan = repro.compile(m, target, graph=default_shard_graph(m))
         print(f"compiled (heuristic design) in {time.time() - t0:.1f}s")
     else:
-        plan = repro.compile(m, target, budget=args.seconds)
+        plan = repro.compile(m, target, budget=args.seconds,
+                             strategy=args.strategy)
         res = plan.search_result
         print(f"searched {res.n_evaluations} designs in "
-              f"{res.wall_seconds:.1f}s -> {plan.graph.label()}")
+              f"{res.wall_seconds:.1f}s ({res.strategy_name} strategy) "
+              f"-> {plan.graph.label()}")
 
     plan.save(args.out)
     loaded = repro.SpmvPlan.load(args.out)

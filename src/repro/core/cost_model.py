@@ -17,7 +17,8 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["GBTRegressor", "program_features", "FEATURE_NAMES"]
+__all__ = ["GBTRegressor", "program_features", "fit_cost_model",
+           "FEATURE_NAMES"]
 
 
 # ----------------------------- tree ensemble ------------------------------
@@ -69,6 +70,10 @@ class _Tree:
             if best is None or gn > best[0]:
                 thr = 0.5 * (xs_s[k - 1] + xs_s[k])
                 mask = X[idx, f] <= thr
+                # huge feature values can round thr onto xs_s[k], leaving
+                # one side empty — not a usable split for this feature
+                if not mask.any() or mask.all():
+                    continue
                 best = (gn, f, thr, idx[mask], idx[~mask])
         if best is None or best[0] <= 1e-12:
             return node_id
@@ -124,6 +129,18 @@ class GBTRegressor:
         """Mean absolute deviation in relative terms (paper reports 5%)."""
         p = self.predict(X)
         return float(np.mean(np.abs(p - y) / np.maximum(np.abs(y), 1e-12)))
+
+
+def fit_cost_model(feature_rows, seconds) -> tuple["GBTRegressor", float]:
+    """Fit the level-3 model on measured candidates: log-time targets.
+
+    Shared by every model-using ``repro.design`` strategy (AnnealStrategy's
+    fine stage, CostModelGuidedStrategy's ranking rounds). Returns
+    (model, MAD on the training set — the paper reports ~5%)."""
+    X = np.stack(feature_rows)
+    y = np.log(np.asarray(seconds, np.float64))
+    model = GBTRegressor().fit(X, y)
+    return model, model.mad(X, y)
 
 
 # ------------------------------- features ---------------------------------

@@ -8,21 +8,24 @@ branches (BIN / ROW_DIV / COL_DIV), the mapping+implementing chain may be
 Operator Graphs ... different formats for different parts", §VII-G).
 
 Graphs are hashable value objects: the search engine memoises on them.
+
+Operator names are resolved through the ``repro.design`` registry, and
+validation runs off the traits operators declare there (``divides``,
+``builds_layout``, ``accepts_layouts``, ``requires``, ``before_layout``) —
+an out-of-tree operator registered with
+``@repro.design.register_operator`` validates and runs like a built-in.
 """
 from __future__ import annotations
 
 import dataclasses
 
+from repro.design.registry import (GraphError, OpSpec, STAGE_CONVERTING,
+                                   STAGE_IMPLEMENTING, get_operator)
 from .metadata import MetadataSet, from_matrix
 from .matrices import SparseMatrix
-from .operators import (OPERATORS, STAGE_CONVERTING, STAGE_IMPLEMENTING,
-                        OpSpec, apply_op)
+from .operators import apply_op
 
 __all__ = ["OperatorGraph", "GraphError", "run_graph"]
-
-
-class GraphError(ValueError):
-    """Raised when an Operator Graph violates operator dependencies."""
 
 
 @dataclasses.dataclass(frozen=True, order=True)
@@ -36,9 +39,9 @@ class OperatorGraph:
     def chain(*specs: OpSpec) -> "OperatorGraph":
         """Convenience: linear graph, converting ops auto-split from the rest."""
         conv = tuple(s for s in specs
-                     if OPERATORS[s.name].stage == STAGE_CONVERTING)
+                     if get_operator(s.name).stage == STAGE_CONVERTING)
         rest = tuple(s for s in specs
-                     if OPERATORS[s.name].stage != STAGE_CONVERTING)
+                     if get_operator(s.name).stage != STAGE_CONVERTING)
         return OperatorGraph(converting=conv, branch_chains=(rest,), shared=True)
 
     def all_ops(self) -> tuple[OpSpec, ...]:
@@ -52,8 +55,7 @@ class OperatorGraph:
 
     def has_branches(self) -> bool:
         return (not self.shared) or any(
-            s.name in ("BIN", "ROW_DIV", "COL_DIV", "HYB_SPLIT")
-            for s in self.converting)
+            get_operator(s.name).divides for s in self.converting)
 
     def label(self) -> str:
         conv = " -> ".join(s.label() for s in self.converting)
@@ -69,51 +71,49 @@ class OperatorGraph:
             raise GraphError("graph must start with COMPRESS (paper §IV-A: "
                              "the mapping stage always begins after COMPRESS)")
         for s in self.converting:
-            if OPERATORS[s.name].stage != STAGE_CONVERTING:
+            if get_operator(s.name).stage != STAGE_CONVERTING:
                 raise GraphError(f"{s.name} is not a converting operator")
         dividers = [s.name for s in self.converting
-                    if s.name in ("BIN", "ROW_DIV", "COL_DIV", "HYB_SPLIT")]
+                    if get_operator(s.name).divides]
         if len(dividers) > 1:
             raise GraphError("at most one dividing operator per graph "
                              "(prototype scope, matches paper examples)")
         if not self.shared and not dividers:
             raise GraphError("per-branch chains require a dividing operator")
         for chain in self.branch_chains:
-            stages = [OPERATORS[s.name].stage for s in chain]
-            if STAGE_CONVERTING in stages:
+            ops = [get_operator(s.name) for s in chain]
+            if any(op.stage == STAGE_CONVERTING for op in ops):
                 raise GraphError("converting op inside a branch chain")
             # mapping ops must precede implementing ops
             seen_impl = False
-            for st in stages:
-                if st == STAGE_IMPLEMENTING:
+            for op in ops:
+                if op.stage == STAGE_IMPLEMENTING:
                     seen_impl = True
                 elif seen_impl:
                     raise GraphError("mapping op after implementing op")
-            layout_builders = [s.name for s in chain
-                               if s.name in ("LANE_ROW_BLOCK", "LANE_NNZ_BLOCK")]
+            layout_builders = [op for op in ops
+                               if op.builds_layout is not None]
             if len(layout_builders) != 1:
                 raise GraphError("each branch chain needs exactly one layout "
                                  "builder (LANE_ROW_BLOCK | LANE_NNZ_BLOCK)")
-            reducers = [s.name for s in chain if s.name.endswith("_RED")]
+            reducers = [op for op in ops if op.is_reducer]
             if len(reducers) != 1:
                 raise GraphError("each branch chain needs exactly one reducer")
             lb, red = layout_builders[0], reducers[0]
-            legal = {"LANE_ROW_BLOCK": {"LANE_TOTAL_RED"},
-                     "LANE_NNZ_BLOCK": {"SEG_SCAN_RED", "ONEHOT_MXU_RED",
-                                        "GMEM_ATOM_RED"}}
-            if red not in legal[lb]:
-                raise GraphError(f"{red} cannot follow {lb} "
+            if lb.builds_layout not in red.accepts_layouts:
+                raise GraphError(f"{red.name} cannot follow {lb.name} "
                                  "(operator dependency, paper §IV-B)")
-            if "SORT_TILE" in (s.name for s in chain) and \
-                    "TILE_ROW_BLOCK" not in (s.name for s in chain):
-                raise GraphError("SORT_TILE requires TILE_ROW_BLOCK")
+            names = [s.name for s in chain]
+            for op in ops:
+                for need in op.requires:
+                    if need not in names:
+                        raise GraphError(f"{op.name} requires {need}")
             # mapping order: tiling/padding decisions before the layout build
-            lb_idx = next(i for i, s in enumerate(chain)
-                          if s.name == layout_builders[0])
-            for i, s in enumerate(chain):
-                if s.name in ("TILE_ROW_BLOCK", "LANE_PAD", "SORT_TILE") \
-                        and i > lb_idx:
-                    raise GraphError(f"{s.name} after layout builder")
+            lb_idx = next(i for i, op in enumerate(ops)
+                          if op.builds_layout is not None)
+            for i, op in enumerate(ops):
+                if op.before_layout and i > lb_idx:
+                    raise GraphError(f"{op.name} after layout builder")
 
 
 def run_graph(matrix: SparseMatrix, graph: OperatorGraph) -> MetadataSet:
@@ -121,7 +121,7 @@ def run_graph(matrix: SparseMatrix, graph: OperatorGraph) -> MetadataSet:
     graph.validate()
     meta = from_matrix(matrix)
     for spec in graph.converting:
-        if not OPERATORS[spec.name].applicable(meta):
+        if not get_operator(spec.name).applicable(meta):
             raise GraphError(f"{spec.name} not applicable at this point")
         meta = apply_op(meta, spec)
 

@@ -49,7 +49,7 @@ from .deprecation import warn_once
 from .metadata import (Block, EllTileLayout, MetadataSet, SegTileLayout)
 
 __all__ = ["SpmvProgram", "build_program", "build_spmv", "plan_format",
-           "build_kernel", "SPEC_VERSION"]
+           "build_kernel", "register_layout_planner", "SPEC_VERSION"]
 
 SPEC_VERSION = 1
 
@@ -215,6 +215,30 @@ def _plan_seg_block(bi: int, block: Block, fmt: dict, steps: list,
     reports.append(rep)
 
 
+# Layout -> spec-step planner dispatch. Keyed on the layout *type* so an
+# out-of-tree operator that packs its own layout class can register a
+# planner (and a matching spec-step interpreter) without editing core:
+# ``register_layout_planner(MyLayout)(my_planner)``. The planner signature
+# matches ``_plan_ell_block``: (bi, block, fmt, steps, reports, compress).
+_LAYOUT_PLANNERS: dict[type, Callable] = {}
+
+
+def register_layout_planner(layout_cls: type, *, replace: bool = False):
+    """Register a format planner for a custom layout type (see
+    ``repro.design``: the open half of the Format & Kernel Generator)."""
+    def deco(fn: Callable) -> Callable:
+        if layout_cls in _LAYOUT_PLANNERS and not replace:
+            raise ValueError(f"planner for {layout_cls.__name__} already "
+                             "registered; pass replace=True to override")
+        _LAYOUT_PLANNERS[layout_cls] = fn
+        return fn
+    return deco
+
+
+register_layout_planner(EllTileLayout)(_plan_ell_block)
+register_layout_planner(SegTileLayout)(_plan_seg_block)
+
+
 def plan_format(meta: MetadataSet, do_compress: bool = True
                 ) -> tuple[dict, dict]:
     """Stage 1: pack format arrays and emit the JSON-able kernel spec."""
@@ -226,10 +250,13 @@ def plan_format(meta: MetadataSet, do_compress: bool = True
     steps: list = []
     reports: list = []
     for bi, block in enumerate(meta.blocks):
-        if isinstance(block.layout, EllTileLayout):
-            _plan_ell_block(bi, block, fmt, steps, reports, do_compress)
-        else:
-            _plan_seg_block(bi, block, fmt, steps, reports, do_compress)
+        planner = _LAYOUT_PLANNERS.get(type(block.layout))
+        if planner is None:
+            raise ValueError(
+                f"no format planner registered for layout type "
+                f"{type(block.layout).__name__}; register one with "
+                "repro.core.kernel_builder.register_layout_planner")
+        planner(bi, block, fmt, steps, reports, do_compress)
     spec = {"version": SPEC_VERSION,
             "n_rows": int(meta.n_rows), "n_cols": int(meta.n_cols),
             "nnz": int(meta.nnz), "padded_nnz": int(meta.padded_nnz()),

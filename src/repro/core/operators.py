@@ -37,38 +37,20 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.design.registry import (OPERATOR_REGISTRY, Operator, OpSpec,
+                                   STAGE_CONVERTING, STAGE_IMPLEMENTING,
+                                   STAGE_MAPPING, get_operator,
+                                   register_operator)
 from .metadata import (Block, EllBucket, EllTileLayout, MetadataSet,
                        ReducePlan, SegTileLayout)
 
 __all__ = ["OpSpec", "OPERATORS", "apply_op", "Operator",
            "STAGE_CONVERTING", "STAGE_MAPPING", "STAGE_IMPLEMENTING"]
 
-STAGE_CONVERTING = "converting"
-STAGE_MAPPING = "mapping"
-STAGE_IMPLEMENTING = "implementing"
 
-
-@dataclasses.dataclass(frozen=True, order=True)
-class OpSpec:
-    """Hashable (operator, params) node of an Operator Graph."""
-
-    name: str
-    params: tuple[tuple[str, object], ...] = ()
-
-    def param(self, key, default=None):
-        for k, v in self.params:
-            if k == key:
-                return v
-        return default
-
-    @staticmethod
-    def make(name: str, **params) -> "OpSpec":
-        return OpSpec(name, tuple(sorted(params.items())))
-
-    def label(self) -> str:
-        ps = ",".join(f"{k}={v}" for k, v in self.params)
-        return f"{self.name}({ps})"
-
+# ``OpSpec`` and the ``Operator`` base class live in
+# ``repro.design.registry`` (the open extension surface) and are
+# re-exported here for the historical import path.
 
 # ---------------------------------------------------------------------------
 # helpers
@@ -111,34 +93,9 @@ def _split_block_rows(block: Block, boundaries: Sequence[int]) -> list[Block]:
     return out
 
 
-# ---------------------------------------------------------------------------
-# operator base
-# ---------------------------------------------------------------------------
-
-class Operator:
-    name: str
-    stage: str
-
-    # parameter grids for the search engine (paper §VI-A levels 2/3)
-    @staticmethod
-    def coarse_grid(meta: MetadataSet | None = None) -> list[dict]:
-        return [{}]
-
-    @staticmethod
-    def fine_grid(meta: MetadataSet | None = None) -> list[dict]:
-        return [{}]
-
-    @staticmethod
-    def applicable(meta: MetadataSet) -> bool:
-        return True
-
-    @staticmethod
-    def apply(meta: MetadataSet, spec: OpSpec) -> MetadataSet:
-        raise NotImplementedError
-
-
 # ------------------------------ converting --------------------------------
 
+@register_operator("COMPRESS")
 class Compress(Operator):
     """Paper COMPRESS: ignore all zeros; canonicalise the COO stream."""
 
@@ -159,6 +116,7 @@ class Compress(Operator):
                                    compressed=True)
 
 
+@register_operator("SORT")
 class Sort(Operator):
     """Paper SORT: global decreasing row-length sort (JAD/SELL-sigma style)."""
 
@@ -175,6 +133,7 @@ class Sort(Operator):
         return meta.with_blocks([_permute_block_rows(b, perm)], spec.label())
 
 
+@register_operator("SORT_SUB")
 class SortSub(Operator):
     """Paper SORT_SUB: sort rows by length within each branch.
 
@@ -196,10 +155,12 @@ class SortSub(Operator):
         return meta.with_blocks(blocks, spec.label())
 
 
+@register_operator("BIN")
 class Bin(Operator):
     """Paper BIN (ACSR-style): group rows into branches by length bins."""
 
     name, stage = "BIN", STAGE_CONVERTING
+    divides = True
 
     @staticmethod
     def coarse_grid(meta=None):
@@ -235,6 +196,7 @@ class Bin(Operator):
         return meta.with_blocks(blocks, spec.label())
 
 
+@register_operator("ROW_DIV")
 class RowDiv(Operator):
     """Paper ROW_DIV: stripe rows into branches.
 
@@ -243,6 +205,7 @@ class RowDiv(Operator):
     """
 
     name, stage = "ROW_DIV", STAGE_CONVERTING
+    divides = True
 
     @staticmethod
     def coarse_grid(meta=None):
@@ -288,6 +251,7 @@ class RowDiv(Operator):
         return meta.with_blocks(_split_block_rows(b, bounds), spec.label())
 
 
+@register_operator("HYB_SPLIT")
 class HybSplit(Operator):
     """BEYOND-PAPER operator: HYB-style per-row decomposition.
 
@@ -304,6 +268,7 @@ class HybSplit(Operator):
     """
 
     name, stage = "HYB_SPLIT", STAGE_CONVERTING
+    divides = True
 
     @staticmethod
     def coarse_grid(meta=None):
@@ -337,10 +302,12 @@ class HybSplit(Operator):
         return meta.with_blocks(blocks, spec.label())
 
 
+@register_operator("COL_DIV")
 class ColDiv(Operator):
     """Paper COL_DIV: stripe columns; branches produce partial sums of y."""
 
     name, stage = "COL_DIV", STAGE_CONVERTING
+    divides = True
 
     @staticmethod
     def coarse_grid(meta=None):
@@ -372,10 +339,12 @@ class ColDiv(Operator):
 
 # ------------------------------- mapping ----------------------------------
 
+@register_operator("TILE_ROW_BLOCK")
 class TileRowBlock(Operator):
     """BMTB_ROW_BLOCK analogue: rows per Pallas grid tile."""
 
     name, stage = "TILE_ROW_BLOCK", STAGE_MAPPING
+    before_layout = True
 
     @staticmethod
     def coarse_grid(meta=None):
@@ -396,11 +365,14 @@ class TileRowBlock(Operator):
                                 spec.label())
 
 
+@register_operator("SORT_TILE")
 class SortTile(Operator):
     """SORT_BMTB analogue: sort rows inside windows of `window` tiles
     (SELL-C-sigma's sigma). Requires TILE_ROW_BLOCK."""
 
     name, stage = "SORT_TILE", STAGE_MAPPING
+    before_layout = True
+    requires = ("TILE_ROW_BLOCK",)
 
     @staticmethod
     def coarse_grid(meta=None):
@@ -432,10 +404,12 @@ class SortTile(Operator):
         return meta.with_blocks(blocks, spec.label())
 
 
+@register_operator("LANE_PAD")
 class LanePad(Operator):
     """BMT(B)_PAD analogue: round tile widths up to a multiple (bucketing)."""
 
     name, stage = "LANE_PAD", STAGE_MAPPING
+    before_layout = True
 
     @staticmethod
     def coarse_grid(meta=None):
@@ -493,10 +467,12 @@ def _build_ell_layout(b: Block) -> EllTileLayout:
     return EllTileLayout(tile_rows=R, buckets=tuple(buckets))
 
 
+@register_operator("LANE_ROW_BLOCK")
 class LaneRowBlock(Operator):
     """BMT_ROW_BLOCK analogue: one row per lane, padded tiles (ELL family)."""
 
     name, stage = "LANE_ROW_BLOCK", STAGE_MAPPING
+    builds_layout = "ell"
 
     @staticmethod
     def applicable(meta):
@@ -553,10 +529,12 @@ def _build_seg_layout(b: Block, chunk: int, lanes: int) -> SegTileLayout:
                          rowmap=rowmap, seg_end=seg_end, seg_rows=seg_rows)
 
 
+@register_operator("LANE_NNZ_BLOCK")
 class LaneNnzBlock(Operator):
     """BMT_NNZ_BLOCK analogue: nnz-balanced flat stream (merge/CSR5 family)."""
 
     name, stage = "LANE_NNZ_BLOCK", STAGE_MAPPING
+    builds_layout = "seg"
 
     @staticmethod
     def coarse_grid(meta=None):
@@ -579,6 +557,7 @@ class LaneNnzBlock(Operator):
         return meta.with_blocks(blocks, spec.label())
 
 
+@register_operator("SET_RESOURCES")
 class SetResources(Operator):
     """Runtime knobs: lane count and execution backend."""
 
@@ -611,10 +590,13 @@ def _set_reduce(meta: MetadataSet, spec: OpSpec, kind: str,
     return meta.with_blocks(blocks, spec.label())
 
 
+@register_operator("LANE_TOTAL_RED")
 class LaneTotalRed(Operator):
     """THREAD_TOTAL_RED analogue: each lane owns a full row; dense reduce."""
 
     name, stage = "LANE_TOTAL_RED", STAGE_IMPLEMENTING
+    is_reducer = True
+    accepts_layouts = ("ell",)
 
     @staticmethod
     def coarse_grid(meta=None):
@@ -631,10 +613,13 @@ class LaneTotalRed(Operator):
         return _set_reduce(meta, spec, "lane_total", EllTileLayout)
 
 
+@register_operator("SEG_SCAN_RED")
 class SegScanRed(Operator):
     """WARP_SEG_RED analogue: segmented scan over the in-tile nnz stream."""
 
     name, stage = "SEG_SCAN_RED", STAGE_IMPLEMENTING
+    is_reducer = True
+    accepts_layouts = ("seg",)
 
     @staticmethod
     def coarse_grid(meta=None):
@@ -651,6 +636,7 @@ class SegScanRed(Operator):
         return _set_reduce(meta, spec, "seg_scan", SegTileLayout)
 
 
+@register_operator("ONEHOT_MXU_RED")
 class OneHotMxuRed(Operator):
     """TPU-native reduction: products x one-hot(local_row) matmul on the MXU.
 
@@ -659,6 +645,8 @@ class OneHotMxuRed(Operator):
     """
 
     name, stage = "ONEHOT_MXU_RED", STAGE_IMPLEMENTING
+    is_reducer = True
+    accepts_layouts = ("seg",)
 
     @staticmethod
     def coarse_grid(meta=None):
@@ -675,6 +663,7 @@ class OneHotMxuRed(Operator):
         return _set_reduce(meta, spec, "onehot_mxu", SegTileLayout)
 
 
+@register_operator("GMEM_ATOM_RED")
 class GmemAtomRed(Operator):
     """Paper GMEM_ATOM_RED: add every product directly into y.
 
@@ -688,6 +677,8 @@ class GmemAtomRed(Operator):
     why the paper keeps it in the operator set."""
 
     name, stage = "GMEM_ATOM_RED", STAGE_IMPLEMENTING
+    is_reducer = True
+    accepts_layouts = ("seg",)
 
     @staticmethod
     def coarse_grid(meta=None):
@@ -704,15 +695,11 @@ class GmemAtomRed(Operator):
         return _set_reduce(meta, spec, "gmem_atom", SegTileLayout)
 
 
-OPERATORS: dict[str, type[Operator]] = {
-    op.name: op
-    for op in (Compress, Sort, SortSub, Bin, RowDiv, ColDiv, HybSplit,
-               TileRowBlock, SortTile, LanePad, LaneRowBlock, LaneNnzBlock,
-               SetResources, LaneTotalRed, SegScanRed, OneHotMxuRed,
-               GmemAtomRed)
-}
+# ``OPERATORS`` *is* the process-wide registry (same dict object), so
+# out-of-tree operators registered via ``repro.design.register_operator``
+# are visible through this historical surface too.
+OPERATORS: dict[str, type[Operator]] = OPERATOR_REGISTRY
 
 
 def apply_op(meta: MetadataSet, spec: OpSpec) -> MetadataSet:
-    op = OPERATORS[spec.name]
-    return op.apply(meta, spec)
+    return get_operator(spec.name).apply(meta, spec)

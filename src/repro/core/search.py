@@ -1,16 +1,19 @@
-"""Search Engine (paper §VI): three-level search over Operator Graphs.
+"""Search Engine (paper §VI): a driver loop over pluggable SearchStrategies.
 
-Level 1 — enumerate graph *structures* (operator chains without parameters)
-by seeded templates + random mutation, driven by simulated annealing.
-Level 2 — for each structure, evaluate a coarse parameter grid by actually
-building and timing the generated SpMV program.
-Level 3 — train the GBT cost model on level-2 measurements and interpolate
-onto the fine parameter grid; only the top predicted candidates are run.
+The three-level search (structure enumeration, coarse-grid timing, cost-
+model fine-grid interpolation) used to be a closed monolith here. It is
+now split along the paper's own seams:
 
-Pruning (paper §VI-B): a ban list keyed on matrix sparsity statistics
-removes operators that cannot help (e.g. BIN on regular matrices), and
-parameter discretisation (e.g. ROW_DIV's ``len_mutation``) collapses
-array-typed parameters to a few integers.
+* the *design space* — what can be searched — lives in
+  ``repro.design.space.DesignSpace`` (structure templates, §VI-B pruning,
+  parameter binding), derived from the open operator registry;
+* the *search policy* — how it is walked — is a
+  ``repro.design.SearchStrategy`` (``propose``/``observe`` protocol).
+  ``AnnealStrategy`` is the original simulated-annealing walk extracted
+  verbatim (candidate-sequence parity at fixed seed); ``GridStrategy``
+  and ``CostModelGuidedStrategy`` ship alongside it;
+* this module keeps the *driver*: oracle checking, timing, memoisation,
+  and the ``run_search`` loop that connects the two.
 
 Every evaluated program is checked against the float64 dense oracle —
 a generated program that is fast but wrong is a bug, not a candidate
@@ -20,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import itertools
 import json
 import math
 import time
@@ -30,86 +32,22 @@ from typing import Optional
 
 import numpy as np
 
-from .cost_model import GBTRegressor, program_features
+from repro.design.space import (CONVERTING_CHOICES,  # noqa: F401 (compat)
+                                MAPPING_IMPL_CHOICES, SEED_STRUCTURES,
+                                DesignSpace, Structure, structure_space)
+from repro.design.strategies import CandidateResult, make_strategy
+from .cost_model import program_features
 from .deprecation import warn_once
 from .graph import GraphError, OperatorGraph, run_graph
 from .kernel_builder import SpmvProgram, build_program
 from .matrices import SparseMatrix
-from .operators import OPERATORS, OpSpec
 
 __all__ = ["SearchConfig", "SearchResult", "AlphaSparseSearch", "search",
-           "run_search", "ProgramCache"]
+           "run_search", "ProgramCache", "Structure", "DesignSpace"]
 
 
-# ------------------------- structure templates ----------------------------
-
-CONVERTING_CHOICES: tuple[tuple[str, ...], ...] = (
-    (),
-    ("SORT",),
-    ("BIN",),
-    ("BIN", "SORT_SUB"),
-    ("ROW_DIV",),
-    ("ROW_DIV", "SORT_SUB"),
-    ("COL_DIV",),
-    ("HYB_SPLIT",),   # beyond-paper: the paper's §VII-H missing operator
-)
-
-MAPPING_IMPL_CHOICES: tuple[tuple[str, ...], ...] = (
-    ("LANE_ROW_BLOCK", "LANE_TOTAL_RED"),
-    ("TILE_ROW_BLOCK", "LANE_ROW_BLOCK", "LANE_TOTAL_RED"),
-    ("TILE_ROW_BLOCK", "LANE_PAD", "LANE_ROW_BLOCK", "LANE_TOTAL_RED"),
-    ("TILE_ROW_BLOCK", "SORT_TILE", "LANE_ROW_BLOCK", "LANE_TOTAL_RED"),
-    ("TILE_ROW_BLOCK", "SORT_TILE", "LANE_PAD", "LANE_ROW_BLOCK",
-     "LANE_TOTAL_RED"),
-    ("LANE_NNZ_BLOCK", "SEG_SCAN_RED"),
-    ("LANE_NNZ_BLOCK", "ONEHOT_MXU_RED"),
-    ("LANE_NNZ_BLOCK", "GMEM_ATOM_RED"),
-)
-
-# Evaluated FIRST, before the annealed random walk: one structure per
-# source-format family (paper Table II "Source" column). Guarantees the
-# search never loses to its own seeds modulo timing noise.
-SEED_STRUCTURES: tuple[tuple[tuple[str, ...], tuple[str, ...]], ...] = (
-    ((), ("TILE_ROW_BLOCK", "LANE_ROW_BLOCK", "LANE_TOTAL_RED")),  # ELL-tiled
-    (("SORT",), ("TILE_ROW_BLOCK", "LANE_ROW_BLOCK",
-                 "LANE_TOTAL_RED")),                               # SELL
-    ((), ("LANE_NNZ_BLOCK", "GMEM_ATOM_RED")),                     # merge/COO
-    ((), ("LANE_NNZ_BLOCK", "SEG_SCAN_RED")),                      # CSR5
-)
-
-
-@dataclasses.dataclass(frozen=True)
-class Structure:
-    """A graph structure: op-name chains, parameters not yet bound."""
-
-    converting: tuple[str, ...]
-    chains: tuple[tuple[str, ...], ...]  # len 1 = shared; len >1 = per-branch
-    shared: bool = True
-
-    def label(self) -> str:
-        conv = "+".join(self.converting) or "-"
-        body = " | ".join("+".join(c) for c in self.chains)
-        return f"{conv} => {body}"
-
-
-def _structure_space(pruned_convs, pruned_chains,
-                     allow_branch_mix: bool) -> list[Structure]:
-    out = []
-    for conv in pruned_convs:
-        for chain in pruned_chains:
-            out.append(Structure(("COMPRESS",) + conv, (chain,), shared=True))
-    if allow_branch_mix:
-        # the paper's branched graphs (§VII-G): different designs per branch.
-        ell = ("TILE_ROW_BLOCK", "LANE_ROW_BLOCK", "LANE_TOTAL_RED")
-        seg = ("LANE_NNZ_BLOCK", "SEG_SCAN_RED")
-        oneh = ("LANE_NNZ_BLOCK", "ONEHOT_MXU_RED")
-        for combo in ((ell, seg), (ell, oneh), (seg, ell)):
-            out.append(Structure(("COMPRESS", "BIN"), combo, shared=False))
-        # HYB proper: dense-regular part -> ELL, overflow -> flat segment
-        atom = ("LANE_NNZ_BLOCK", "GMEM_ATOM_RED")
-        out.append(Structure(("COMPRESS", "HYB_SPLIT"), (ell, atom),
-                             shared=False))
-    return out
+# compat alias: the structure enumerator moved to repro.design.space
+_structure_space = structure_space
 
 
 # ----------------------------- configuration ------------------------------
@@ -158,6 +96,7 @@ class SearchResult:
     cost_model_mad: Optional[float]
     pruned_ops: tuple[str, ...]
     cached: bool = False          # True when served from a ProgramCache
+    strategy_name: str = "anneal"  # which SearchStrategy produced this
 
     def is_machine_designed(self) -> bool:
         """Paper §VII-G 'creativity': graph not matching any single source
@@ -175,6 +114,8 @@ class SearchResult:
 # ------------------------------ the searcher ------------------------------
 
 class AlphaSparseSearch:
+    """The driver: owns the oracle, timing, memo and the strategy loop."""
+
     def __init__(self, matrix: SparseMatrix, config: SearchConfig = None):
         self.m = matrix
         self.cfg = config or SearchConfig()
@@ -195,57 +136,18 @@ class AlphaSparseSearch:
         self._best: tuple[float, OperatorGraph, SpmvProgram] = (
             math.inf, None, None)
         self.pruned_ops: tuple[str, ...] = ()
+        self._design_space: Optional[DesignSpace] = None
 
-    # -- pruning (paper §VI-B) --
+    def _space(self) -> DesignSpace:
+        if self._design_space is None:
+            self._design_space = DesignSpace(self.m, self.cfg)
+            self.pruned_ops = self._design_space.pruned_ops
+        return self._design_space
+
     def _pruned_space(self):
-        convs = list(CONVERTING_CHOICES)
-        chains = list(MAPPING_IMPL_CHOICES)
-        pruned = []
-        if self.cfg.use_pruning:
-            row_var = self.m.row_variance()
-            avg_len = self.m.avg_row_length()
-            if row_var <= 100.0:          # regular: branching cannot help
-                convs = [c for c in convs
-                         if not any(o in ("BIN", "ROW_DIV", "HYB_SPLIT")
-                                    for o in c)]
-                pruned += ["BIN", "ROW_DIV", "SORT_SUB", "HYB_SPLIT"]
-            if row_var <= 4.0:            # near-uniform rows: sorting useless
-                convs = [c for c in convs if "SORT" not in c]
-                pruned += ["SORT"]
-            if row_var > 100.0:
-                # irregular: global-width ELL explodes in padding
-                chains = [c for c in chains
-                          if c != ("LANE_ROW_BLOCK", "LANE_TOTAL_RED")]
-                pruned += ["LANE_ROW_BLOCK(untiled)"]
-            if self.m.n_cols < 512:
-                convs = [c for c in convs if "COL_DIV" not in c]
-                pruned += ["COL_DIV"]
-            if avg_len <= 2.0:            # rows too short for scan reductions
-                chains = [c for c in chains if "SEG_SCAN_RED" not in c]
-                pruned += ["SEG_SCAN_RED"]
-        self.pruned_ops = tuple(dict.fromkeys(pruned))
-        return convs, chains
-
-    # -- parameter binding --
-    def _bind(self, structure: Structure, grid: str) -> list[OperatorGraph]:
-        """Cartesian product of per-op parameter grids -> concrete graphs."""
-        def combos(chain):
-            per_op = []
-            for name in chain:
-                op = OPERATORS[name]
-                g = (op.coarse_grid(None) if grid == "coarse"
-                     else op.fine_grid(None))
-                per_op.append([OpSpec.make(name, **p) for p in g])
-            return [tuple(c) for c in itertools.product(*per_op)]
-
-        conv_combos = combos(structure.converting)
-        chain_combos = [combos(c) for c in structure.chains]
-        graphs = []
-        for conv in conv_combos:
-            for body in itertools.product(*chain_combos):
-                graphs.append(OperatorGraph(conv, tuple(body),
-                                            shared=structure.shared))
-        return graphs
+        """Compat shim: the §VI-B pruning now lives in ``DesignSpace``."""
+        space = self._space()
+        return space._convs, space._chains
 
     # -- level 2 evaluation: run the generated program --
     def _evaluate(self, graph: OperatorGraph,
@@ -287,97 +189,51 @@ class AlphaSparseSearch:
             self._best = (best, graph, prog)
         return best
 
-    def _eval_structure(self, structure: Structure, deadline: float) -> float:
-        graphs = self._bind(structure, "coarse")
-        if len(graphs) > self.cfg.coarse_samples:
-            idx = self.rng.choice(len(graphs), self.cfg.coarse_samples,
-                                  replace=False)
-            graphs = [graphs[i] for i in idx]
-        best = math.inf
-        for g in graphs:
-            if time.perf_counter() > deadline:
-                break
-            best = min(best, self._evaluate(g, structure.label()))
-        return best
-
-    # -- the driver --
-    def run(self) -> SearchResult:
+    # -- the driver loop over the SearchStrategy protocol --
+    def run(self, strategy=None, warm_start=()) -> SearchResult:
+        strategy = make_strategy(strategy)
         t_start = time.perf_counter()
         deadline = t_start + self.cfg.max_seconds
-        convs, chains = self._pruned_space()
-        space = _structure_space(tuple(convs), tuple(chains),
-                                 self.cfg.allow_branch_mix)
-        self.rng.shuffle(space)
-
-        # Seed pass: one structure per source-format family, evaluated
-        # unconditionally (they are the fidelity floor — the search must
-        # never lose to its own source formats). Graph evals are compile-
-        # bound on CPU, so without this pass a small budget could exhaust
-        # itself before reaching the seg-family seeds.
-        seeds = [Structure(("COMPRESS",) + c, (b,), shared=True)
-                 for c, b in SEED_STRUCTURES]
+        # seed-pass candidates are the fidelity floor (the search must never
+        # lose to its own source formats): they run under an extended wall
         seed_deadline = t_start + 2.0 * self.cfg.max_seconds
-        n_structs = 0
-        for structure in seeds:
-            self._eval_structure(structure, seed_deadline)
-            n_structs += 1
-        space = [s for s in space if s not in seeds]
+        space = self._space()
+        strategy.reset(space, self.rng, self.cfg, deadline=deadline)
 
-        # Level 1+2: simulated annealing over structures
-        temp = self.cfg.sa_temperature
-        current_cost = self._best[0]
-        for structure in space[: self.cfg.max_structures]:
-            if time.perf_counter() > deadline:
+        history: list[CandidateResult] = []
+
+        def _timed(graph, label) -> CandidateResult:
+            n_rec = len(self.records)
+            seconds = self._evaluate(graph, label)
+            feats = (self.records[-1].features
+                     if len(self.records) > n_rec else None)
+            return CandidateResult(graph=graph, seconds=seconds,
+                                   label=label, features=feats)
+
+        # warm start (e.g. ``PlanStore.suggest``): time the suggested
+        # graph(s) first so every strategy starts from the stored winner
+        for g in warm_start or ():
+            if g is None:
+                continue
+            res = _timed(g, "warm")
+            history.append(res)
+            strategy.observe(res)
+
+        stopped = False
+        while not stopped:
+            batch = strategy.propose(space, history)
+            if not batch:
                 break
-            cost = self._eval_structure(structure, deadline)
-            n_structs += 1
-            if math.isfinite(cost):
-                # SA acceptance on the *relative* cost of the new structure
-                if cost < current_cost or self.rng.random() < math.exp(
-                        -(cost - current_cost)
-                        / max(temp * max(current_cost, 1e-9), 1e-12)):
-                    current_cost = cost
-                elif temp < 0.05 and cost > 2.0 * self._best[0]:
-                    break  # annealed out: stop exploring poor structures
-            temp *= self.cfg.sa_decay
-
-        # Level 3: cost-model interpolation on the fine grid
-        mad = None
-        if (self.cfg.use_cost_model and len(self.records) >= 8
-                and time.perf_counter() < deadline):
-            X = np.stack([r.features for r in self.records])
-            yv = np.log(np.array([r.seconds for r in self.records]))
-            model = GBTRegressor().fit(X, yv)
-            mad = model.mad(X, yv)
-            by_structure: dict[str, float] = {}
-            for r in self.records:
-                by_structure[r.structure] = min(
-                    by_structure.get(r.structure, math.inf), r.seconds)
-            top = sorted(by_structure, key=by_structure.get)[
-                : self.cfg.fine_top_structures]
-            cands: list[tuple[float, OperatorGraph]] = []
-            for structure in space:
-                if structure.label() not in top:
-                    continue
-                for g in self._bind(structure, "fine"):
-                    if g in self._memo:
+            for prop in batch:
+                limit = seed_deadline if prop.mandatory else deadline
+                if time.perf_counter() > limit:
+                    if prop.mandatory:
                         continue
-                    try:
-                        g.validate()
-                        meta = run_graph(self.m, g)
-                        prog = build_program(meta, backend=self.cfg.backend,
-                                             jit=False)
-                        feats = program_features(meta, prog,
-                                                 self.cfg.batch_size)
-                    except (GraphError, ValueError):
-                        continue
-                    pred = float(model.predict(feats[None])[0])
-                    cands.append((pred, g))
-            cands.sort(key=lambda t: t[0])
-            for _, g in cands[: self.cfg.fine_eval_budget]:
-                if time.perf_counter() > deadline:
+                    stopped = True
                     break
-                self._evaluate(g, "fine")
+                res = _timed(prop.graph, prop.label)
+                history.append(res)
+                strategy.observe(res)
 
         wall = time.perf_counter() - t_start
         best_s, best_g, best_p = self._best
@@ -388,9 +244,13 @@ class AlphaSparseSearch:
         return SearchResult(best_graph=best_g, best_program=best_p,
                             best_seconds=best_s, gflops=gflops,
                             n_evaluations=len(self._memo),
-                            n_structures=n_structs, wall_seconds=wall,
-                            records=self.records, cost_model_mad=mad,
-                            pruned_ops=self.pruned_ops)
+                            n_structures=getattr(strategy, "n_structures", 0),
+                            wall_seconds=wall,
+                            records=self.records,
+                            cost_model_mad=getattr(strategy,
+                                                   "cost_model_mad", None),
+                            pruned_ops=self.pruned_ops,
+                            strategy_name=strategy.name)
 
 
 # ------------------------------ program cache ------------------------------
@@ -403,6 +263,7 @@ def _graph_to_jsonable(g: OperatorGraph) -> dict:
 
 
 def _graph_from_jsonable(d: dict) -> OperatorGraph:
+    from repro.design.registry import OpSpec
     spec = lambda e: OpSpec(e[0], tuple((k, v) for k, v in e[1]))
     return OperatorGraph(
         converting=tuple(spec(e) for e in d["converting"]),
@@ -413,8 +274,8 @@ def _graph_from_jsonable(d: dict) -> OperatorGraph:
 
 class ProgramCache:
     """Memo of ``SearchResult``s keyed by (matrix fingerprint, SearchConfig,
-    batch_size) — searches are deterministic per key, so benchmark reruns
-    and serving restarts can skip straight to the winning design.
+    strategy, batch_size) — searches are deterministic per key, so benchmark
+    reruns and serving restarts can skip straight to the winning design.
 
     Two layers:
 
@@ -428,8 +289,9 @@ class ProgramCache:
     Key format (also the npz filename): ``<matrix-sha1-16>-<config-sha1-8>
     -b<batch_size>``, where the matrix fingerprint hashes (n_rows, n_cols,
     nnz, rows, cols, vals) and the config hash covers every SearchConfig
-    field (batch_size is additionally spelled out for human-auditable
-    cache directories).
+    field PLUS the strategy name + explicit strategy params
+    (``SearchStrategy.key()``) — a ``GridStrategy`` result must never be
+    served for an ``AnnealStrategy`` request on the same matrix/budget.
     """
 
     def __init__(self, cache_dir: Optional[str] = None):
@@ -448,9 +310,13 @@ class ProgramCache:
         return h.hexdigest()[:16]
 
     @staticmethod
-    def key(m: SparseMatrix, config: SearchConfig) -> str:
+    def key(m: SparseMatrix, config: SearchConfig, strategy=None) -> str:
         blob = json.dumps(dataclasses.asdict(config), sort_keys=True,
                           default=str)
+        # the strategy identity is part of the key: without it a
+        # GridStrategy result would silently satisfy an AnnealStrategy
+        # request for the same (matrix, budget) and vice versa
+        blob += "|" + make_strategy(strategy).key()
         cfg_h = hashlib.sha1(blob.encode()).hexdigest()[:8]
         return (f"{ProgramCache.matrix_fingerprint(m)}-{cfg_h}"
                 f"-b{max(config.batch_size, 1)}")
@@ -458,9 +324,9 @@ class ProgramCache:
     def _path(self, key: str) -> Optional[Path]:
         return self.cache_dir / f"{key}.npz" if self.cache_dir else None
 
-    def get(self, m: SparseMatrix,
-            config: SearchConfig) -> Optional[SearchResult]:
-        key = self.key(m, config)
+    def get(self, m: SparseMatrix, config: SearchConfig,
+            strategy=None) -> Optional[SearchResult]:
+        key = self.key(m, config, strategy)
         if key in self._mem:
             self.hits += 1
             return self._mem[key]
@@ -481,7 +347,9 @@ class ProgramCache:
                         wall_seconds=float(z["wall_seconds"]),
                         records=[], cost_model_mad=None,
                         pruned_ops=tuple(str(p) for p in z["pruned_ops"]),
-                        cached=True)
+                        cached=True,
+                        strategy_name=(str(z["strategy"])
+                                       if "strategy" in z.files else "anneal"))
             except (OSError, KeyError, ValueError, GraphError) as e:
                 warnings.warn(f"program cache entry {path} unusable "
                               f"({e!r}); re-searching", RuntimeWarning)
@@ -494,8 +362,8 @@ class ProgramCache:
         return None
 
     def put(self, m: SparseMatrix, config: SearchConfig,
-            result: SearchResult) -> None:
-        key = self.key(m, config)
+            result: SearchResult, strategy=None) -> None:
+        key = self.key(m, config, strategy)
         self._mem[key] = result
         path = self._path(key)
         if path is None:
@@ -508,6 +376,7 @@ class ProgramCache:
         np.savez(path,
                  graph_json=np.str_(graph_json),
                  backend=np.str_(config.backend),
+                 strategy=np.str_(result.strategy_name),
                  best_seconds=result.best_seconds,
                  gflops=result.gflops,
                  n_evaluations=result.n_evaluations,
@@ -517,21 +386,32 @@ class ProgramCache:
 
 
 def run_search(matrix: SparseMatrix, config: SearchConfig = None,
-               cache: Optional[ProgramCache] = None) -> SearchResult:
+               cache: Optional[ProgramCache] = None, strategy=None,
+               warm_start=None) -> SearchResult:
     """Run the §VI search: matrix in, winning design + program + stats out.
 
     This is the search primitive ``repro.compile`` drives; it returns the
-    full ``SearchResult`` (records, cost-model MAD, pruning report). With
-    ``cache`` given, a prior result for the same (matrix, config,
-    batch_size) is returned without re-searching."""
+    full ``SearchResult`` (records, cost-model MAD, pruning report).
+
+    * ``strategy`` — a ``repro.design.SearchStrategy`` (instance, class or
+      registered name: "anneal" | "grid" | "cost_model"); None = the
+      default ``AnnealStrategy`` (behaviorally identical to the historical
+      hard-wired walk).
+    * ``warm_start`` — optional iterable of ``OperatorGraph``\\ s timed
+      before the strategy's own walk (e.g. ``PlanStore.suggest``).
+    * ``cache`` — a prior result for the same (matrix, config, strategy,
+      batch_size) is returned without re-searching.
+    """
     config = config or SearchConfig()
+    strategy = make_strategy(strategy)
     if cache is not None:
-        hit = cache.get(matrix, config)
+        hit = cache.get(matrix, config, strategy)
         if hit is not None:
             return hit
-    res = AlphaSparseSearch(matrix, config).run()
+    res = AlphaSparseSearch(matrix, config).run(strategy,
+                                                warm_start=warm_start or ())
     if cache is not None:
-        cache.put(matrix, config, res)
+        cache.put(matrix, config, res, strategy)
     return res
 
 

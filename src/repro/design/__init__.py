@@ -1,0 +1,67 @@
+"""``repro.design``: the public, extensible design-space API.
+
+The paper's Operator Graph is an *open* design space; this package is
+where it opens up:
+
+* **operator registry** — ``@register_operator("MY_OP")`` adds an
+  out-of-tree :class:`Operator` that flows Designer -> graph JSON ->
+  kernel spec -> saved ``SpmvPlan`` without touching ``repro.core``;
+* **DesignSpace** — enumerates/binds candidate graphs for a (matrix,
+  SearchConfig) pair: structure templates, §VI-B pruning, parameter
+  grids, cost-model features;
+* **SearchStrategy protocol** — ``propose(space, history)`` /
+  ``observe(result)``; shipped strategies: ``AnnealStrategy`` (the
+  original SA walk, default), ``GridStrategy`` (coarse->fine grids),
+  ``CostModelGuidedStrategy`` (GBT-ranked proposals). Register custom
+  policies with ``@register_strategy("name")`` and select them via
+  ``repro.compile(..., strategy="name")`` or ``repro-compile
+  --strategy name``.
+
+Attribute access is lazy (PEP 562, same as ``repro`` itself): importing
+``repro.design`` pulls in neither jax nor numpy, so operators can be
+registered before any launcher sets ``XLA_FLAGS``.
+"""
+
+_EXPORTS = {
+    # registry (stdlib-only module: safe to import eagerly via attribute)
+    "Operator": "repro.design.registry",
+    "OpSpec": "repro.design.registry",
+    "GraphError": "repro.design.registry",
+    "register_operator": "repro.design.registry",
+    "unregister_operator": "repro.design.registry",
+    "get_operator": "repro.design.registry",
+    "operator_names": "repro.design.registry",
+    "OPERATOR_REGISTRY": "repro.design.registry",
+    "STAGE_CONVERTING": "repro.design.registry",
+    "STAGE_MAPPING": "repro.design.registry",
+    "STAGE_IMPLEMENTING": "repro.design.registry",
+    # design space
+    "DesignSpace": "repro.design.space",
+    "Structure": "repro.design.space",
+    # strategies
+    "SearchStrategy": "repro.design.strategies",
+    "Proposal": "repro.design.strategies",
+    "CandidateResult": "repro.design.strategies",
+    "AnnealStrategy": "repro.design.strategies",
+    "GridStrategy": "repro.design.strategies",
+    "CostModelGuidedStrategy": "repro.design.strategies",
+    "register_strategy": "repro.design.strategies",
+    "make_strategy": "repro.design.strategies",
+    "strategy_names": "repro.design.strategies",
+    "STRATEGY_REGISTRY": "repro.design.strategies",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(
+            f"module 'repro.design' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return __all__

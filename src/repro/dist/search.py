@@ -8,8 +8,15 @@ head-row shard is irregular (SEG-family designs win), the tail shards are
 near-uniform (ELL-family designs win). Running the §VI search independently
 per shard lets the distributed format be heterogeneous.
 
-Determinism: shard i searches with ``seed + i`` derived from one base seed,
-so the explored structure sequence is reproducible per shard.
+Determinism: shard i searches with ``seed + i`` derived from one base
+seed — per-shard walks are reproducible AND mutually divergent (passing
+the same ``SearchConfig.seed`` to every shard would make all shards
+explore the identical structure shuffle, wasting the heterogeneity this
+module exists for; ``tests/test_design.py`` guards the divergence).
+
+The search *policy* is pluggable per the ``repro.design`` SearchStrategy
+protocol: ``ShardedSearchConfig.strategy`` (name or instance) is handed
+to every per-shard ``run_search``.
 """
 from __future__ import annotations
 
@@ -42,6 +49,9 @@ class ShardedSearchConfig:
     mode: str = "row"                 # 'row' | 'col'
     balance: str = "nnz"              # row-boundary strategy
     search: SearchConfig = dataclasses.field(default_factory=_default_budget)
+    # search policy for every per-shard search: a repro.design strategy
+    # name ("anneal" | "grid" | "cost_model"), instance, or None (anneal)
+    strategy: object = None
     seed: int = 0
     # shards below this nnz skip the search and take the heuristic design
     # (a search on a near-empty shard is all compile overhead, no signal)
@@ -97,11 +107,14 @@ def dist_search(m: SparseMatrix, mesh,
             reports.append(ShardReport(s, False, None, None))
             continue
         if s.matrix.nnz >= cfg.min_nnz_for_search:
+            # per-shard seed: shard walks must diverge (seed + shard_id),
+            # not replay one walk n_shards times
             scfg = dataclasses.replace(cfg.search,
                                        seed=cfg.seed + cfg.search.seed
                                        + s.index,
                                        backend=cfg.backend)
-            res = run_search(s.matrix, scfg, cache=cache)
+            res = run_search(s.matrix, scfg, cache=cache,
+                             strategy=cfg.strategy)
             programs.append(res.best_program)
             reports.append(ShardReport(s, True, res.best_graph.label(), res))
         else:
