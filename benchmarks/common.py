@@ -1,10 +1,18 @@
-"""Shared benchmark utilities: timing, the evaluation suite, CSV output."""
+"""Shared benchmark utilities: timing, the evaluation suite, CSV output.
+
+``time_fn`` is THE timing loop (warmup + ``block_until_ready`` +
+median-of-k) — every benchmark that writes a ``BENCH_*.json`` must use
+it so the numbers in ``BENCH_summary.json`` are comparable.
+"""
 from __future__ import annotations
 
 import os
+import statistics
 import time
 
-from repro.core.matrices import make_suite
+from repro.core.matrices import (banded_matrix, hyb_friendly_matrix,
+                                 make_suite, powerlaw_matrix,
+                                 random_uniform_matrix)
 from repro.core.search import SearchConfig
 
 # scale knob: REPRO_BENCH_SCALE=quick|full
@@ -13,6 +21,28 @@ SCALE = os.environ.get("REPRO_BENCH_SCALE", "quick")
 
 def bench_suite():
     return make_suite("small" if SCALE == "quick" else "medium")
+
+
+def smoke_families() -> dict:
+    """The shared tiny 4-family set every ``--smoke`` benchmark runs on
+    (the regularity axes of the paper's Figure 9 suite)."""
+    n = 192
+    return {
+        "banded": banded_matrix(n, 3, seed=1),
+        "uniform": random_uniform_matrix(n, n, 6.0 / n, seed=2),
+        "powerlaw": powerlaw_matrix(n, n, 6.0, 1.2, seed=3),
+        "hyb": hyb_friendly_matrix(n, 5, max(n // 64, 2), 60, seed=4),
+    }
+
+
+def scaled_families(n: int) -> dict:
+    """The canonical 4-family recipe at size ``n`` (non-smoke runs)."""
+    return {
+        "banded": banded_matrix(n, 4, seed=1),
+        "uniform": random_uniform_matrix(n, n, 8.0 / n, seed=2),
+        "powerlaw": powerlaw_matrix(n, n, 8.0, 1.2, seed=3),
+        "hyb": hyb_friendly_matrix(n, 6, max(n // 128, 4), 240, seed=4),
+    }
 
 
 def search_budget() -> SearchConfig:
@@ -52,20 +82,29 @@ def cached_search(m):
     return plan.search_result
 
 
-def time_call(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
-    """Min wall seconds over repeats of a blocking call."""
+def time_fn(fn, *args, repeats: int = 5, warmup: int = 2,
+            reduce: str = "median") -> float:
+    """Wall seconds of a blocking call: warmup, then median (default) or
+    min over ``repeats``. The one timing loop shared by every benchmark —
+    hoisted here so all BENCH_*.json numbers use identical methodology."""
     for _ in range(warmup):
         r = fn(*args)
         if hasattr(r, "block_until_ready"):
             r.block_until_ready()
-    best = float("inf")
+    samples = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         r = fn(*args)
         if hasattr(r, "block_until_ready"):
             r.block_until_ready()
-        best = min(best, time.perf_counter() - t0)
-    return best
+        samples.append(time.perf_counter() - t0)
+    return min(samples) if reduce == "min" else statistics.median(samples)
+
+
+def time_call(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Legacy alias: min wall seconds (the fig* benchmarks' historical
+    reduction). New benchmarks should call :func:`time_fn` directly."""
+    return time_fn(fn, *args, repeats=repeats, warmup=warmup, reduce="min")
 
 
 def gflops(nnz: int, seconds: float) -> float:

@@ -30,7 +30,7 @@ from pathlib import Path
 import numpy as np
 import jax
 
-from common import SCALE, bench_suite, emit, gflops, time_call
+from common import SCALE, bench_suite, emit, gflops, time_fn
 from repro.dist.spmv import shard_map_spmv
 
 SHARD_COUNTS = (1, 2, 4, 8)
@@ -59,7 +59,7 @@ def main():
                     y = np.asarray(prog(x))
                     assert np.abs(y - oracle).max() < 1e-4 * scale, \
                         (mat_name, n_shards, mode, backend)
-                    t = time_call(prog, x)
+                    t = time_fn(prog, x)
                     nnz_max = max(s.matrix.nnz for s in prog.shards)
                     repl = prog.replicated_format_bytes
                     perdev = prog.per_device_format_bytes

@@ -35,14 +35,12 @@ import jax.numpy as jnp
 
 from repro.core.graph import run_graph
 from repro.core.kernel_builder import build_program
-from repro.core.matrices import (banded_matrix, hyb_friendly_matrix,
-                                 powerlaw_matrix, random_uniform_matrix)
 from repro.dist.spmv import default_shard_graph
 
 try:                      # runnable as module (-m benchmarks.spmm_batch) ...
-    from .common import SCALE, emit, time_call
+    from .common import SCALE, emit, scaled_families, smoke_families, time_fn
 except ImportError:       # ... or as a plain script from the repo root
-    from common import SCALE, emit, time_call
+    from common import SCALE, emit, scaled_families, smoke_families, time_fn
 
 SMOKE_WALL_SECONDS = 300.0   # --smoke guard: CI fails loudly on a hang
 
@@ -50,21 +48,9 @@ SMOKE_WALL_SECONDS = 300.0   # --smoke guard: CI fails loudly on a hang
 def spmm_families(smoke: bool) -> dict:
     """The 4 benchmark matrix families at smoke / quick / full scale."""
     if smoke:
-        n = 192
-        return {
-            "banded": banded_matrix(n, 3, seed=1),
-            "uniform": random_uniform_matrix(n, n, 6.0 / n, seed=2),
-            "powerlaw": powerlaw_matrix(n, n, 6.0, 1.2, seed=3),
-            "hyb": hyb_friendly_matrix(n, 5, max(n // 64, 2), 60, seed=4),
-        }
+        return smoke_families()
     s = {"quick": 1, "full": 4}.get(SCALE, 1)
-    n = 1024 * s
-    return {
-        "banded": banded_matrix(n, 4, seed=1),
-        "uniform": random_uniform_matrix(n, n, 8.0 / n, seed=2),
-        "powerlaw": powerlaw_matrix(n, n, 8.0, 1.2, seed=3),
-        "hyb": hyb_friendly_matrix(n, 6, max(n // 128, 4), 40 * 6, seed=4),
-    }
+    return scaled_families(1024 * s)
 
 
 def bench_one(name: str, m, batch: int, repeats: int) -> dict:
@@ -87,8 +73,8 @@ def bench_one(name: str, m, batch: int, repeats: int) -> dict:
     def vmap_path(xb):
         return jax.vmap(lambda xi: prog(xi))(xb)
 
-    vmap_s = time_call(vmap_path, Xrows, repeats=repeats, warmup=1)
-    fused_s = time_call(prog, X, repeats=repeats, warmup=1)
+    vmap_s = time_fn(vmap_path, Xrows, repeats=repeats, warmup=1)
+    fused_s = time_fn(prog, X, repeats=repeats, warmup=1)
     speedup = vmap_s / max(fused_s, 1e-12)
     design = graph.label()
     emit(f"spmm_{name}_vmap", vmap_s * 1e6, f"B={batch}")

@@ -13,6 +13,12 @@ design}}}, winners: {name: strategy}}``.
 
 ``--smoke`` runs tiny matrices under a wall-clock guard (CI): exit 3 on
 guard breach, exit 1 if any strategy fails to produce a valid program.
+
+NOTE (fused-combine PR): the family builders moved to
+``benchmarks.common`` so every BENCH_*.json uses identical workloads.
+This changed the non-smoke ``hyb`` recipe (band width / tail length now
+match the canonical suite) — quick/full-scale hyb numbers are not
+comparable across that commit boundary.
 """
 from __future__ import annotations
 
@@ -22,14 +28,12 @@ import sys
 import time
 from pathlib import Path
 
-from repro.core.matrices import (banded_matrix, hyb_friendly_matrix,
-                                 powerlaw_matrix, random_uniform_matrix)
 from repro.core.search import SearchConfig, run_search
 
 try:                      # runnable as module (-m benchmarks.strategy_compare)
-    from .common import SCALE, emit
+    from .common import SCALE, emit, scaled_families, smoke_families
 except ImportError:       # ... or as a plain script from the repo root
-    from common import SCALE, emit
+    from common import SCALE, emit, scaled_families, smoke_families
 
 STRATEGIES = ("anneal", "grid", "cost_model")
 SMOKE_WALL_SECONDS = 300.0   # --smoke guard: CI fails loudly on a hang
@@ -37,21 +41,9 @@ SMOKE_WALL_SECONDS = 300.0   # --smoke guard: CI fails loudly on a hang
 
 def families(smoke: bool) -> dict:
     if smoke:
-        n = 192
-        return {
-            "banded": banded_matrix(n, 3, seed=1),
-            "uniform": random_uniform_matrix(n, n, 6.0 / n, seed=2),
-            "powerlaw": powerlaw_matrix(n, n, 6.0, 1.2, seed=3),
-            "hyb": hyb_friendly_matrix(n, 5, max(n // 64, 2), 60, seed=4),
-        }
+        return smoke_families()
     s = {"quick": 1, "full": 4}.get(SCALE, 1)
-    n = 512 * s
-    return {
-        "banded": banded_matrix(n, 4, seed=1),
-        "uniform": random_uniform_matrix(n, n, 8.0 / n, seed=2),
-        "powerlaw": powerlaw_matrix(n, n, 8.0, 1.2, seed=3),
-        "hyb": hyb_friendly_matrix(n, 6, max(n // 96, 3), 80, seed=4),
-    }
+    return scaled_families(512 * s)
 
 
 def budget(smoke: bool) -> SearchConfig:

@@ -1,0 +1,63 @@
+"""Merge every BENCH_*.json into one BENCH_summary.json.
+
+Each benchmark writes its own artifact (BENCH_spmm.json, BENCH_dist.json,
+BENCH_search.json, BENCH_kernelfuse.json, ...); CI runs this last so the
+perf trend is a single file keyed by benchmark name, with headline
+numbers lifted to the top level for quick diffing across commits.
+
+Usage: python benchmarks/summarize.py [--dir <repo root>] [--out <path>]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+SUMMARY_NAME = "BENCH_summary.json"
+
+# headline keys per benchmark: small scalars worth diffing at the top
+_HEADLINES = ("n_speedup_ok", "n_devices", "dedup_ok_at_4plus_shards",
+              "winners", "batch", "tiles_per_step", "wall_seconds",
+              "wall_seconds_total")
+
+
+def summarize(bench_dir: Path) -> dict:
+    benchmarks = {}
+    for path in sorted(bench_dir.glob("BENCH_*.json")):
+        if path.name == SUMMARY_NAME:
+            continue
+        name = path.stem[len("BENCH_"):]
+        try:
+            payload = json.loads(path.read_text())
+        except (OSError, ValueError) as e:
+            benchmarks[name] = {"error": repr(e)}
+            continue
+        benchmarks[name] = payload
+    headline = {
+        name: {k: payload[k] for k in _HEADLINES if k in payload}
+        for name, payload in benchmarks.items()
+        if isinstance(payload, dict)
+    }
+    return {"n_benchmarks": len(benchmarks), "headline": headline,
+            "benchmarks": benchmarks}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default=None,
+                    help="directory holding BENCH_*.json (default: repo root)")
+    ap.add_argument("--out", default=None,
+                    help=f"output path (default: <dir>/{SUMMARY_NAME})")
+    args = ap.parse_args(argv)
+    bench_dir = Path(args.dir) if args.dir else \
+        Path(__file__).resolve().parent.parent
+    out_path = Path(args.out) if args.out else bench_dir / SUMMARY_NAME
+    summary = summarize(bench_dir)
+    out_path.write_text(json.dumps(summary, indent=1, sort_keys=True))
+    print(f"merged {summary['n_benchmarks']} benchmark files -> {out_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -48,7 +48,11 @@ from repro.core.search import (ProgramCache, SearchConfig, SearchResult,
 __all__ = ["Target", "SpmvPlan", "ShardedSpmvPlan", "PlanStore", "compile",
            "load_plan"]
 
-PLAN_FORMAT_VERSION = 1
+# Version 2 adds bf16 storage (arrays saved as uint16 views under
+# "bf16!"-marked keys). Plans without bf16 arrays are still written as
+# version 1, so older readers keep loading everything they can actually
+# restore and get the clean "format too new" error otherwise.
+PLAN_FORMAT_VERSION = 2
 
 
 # --------------------------------- Target ----------------------------------
@@ -63,8 +67,10 @@ class Target:
     ``axis_name`` with the given ``partition`` mode ("row" | "col") and
     boundary ``balance`` ("nnz" | "rows"). ``batch_size`` is the number of
     right-hand sides the plan is tuned for (B > 1 makes the search time
-    candidates on the fused SpMM path). ``dtype`` is the input/activation
-    dtype (format arrays are float32).
+    candidates on the fused SpMM path). ``dtype`` is the activation AND
+    preferred storage dtype: ``"bfloat16"`` feeds x as bf16 and lets the
+    search choose bf16-stored vals (+ int16 cols where n_cols fits) per
+    matrix — kernels always accumulate in float32, so outputs stay fp32.
     """
 
     backend: str = "jax"
@@ -84,8 +90,6 @@ class Target:
         if self.dtype not in ("float32", "bfloat16"):
             raise ValueError(f"unsupported dtype {self.dtype!r} "
                              "(float32 | bfloat16)")
-        if self.dtype != "float32" and self.backend == "pallas":
-            raise ValueError("pallas kernels are float32-only for now")
 
     def spec_dict(self) -> dict:
         """JSON-able identity (mesh reduced to its axis shape)."""
@@ -103,6 +107,45 @@ class Target:
 
 def _x_dtype(target: Target):
     return jnp.bfloat16 if target.dtype == "bfloat16" else jnp.float32
+
+
+# npz cannot serialize ml_dtypes extension dtypes (bfloat16 lands as a raw
+# void field); bf16 arrays travel as uint16 views under a marked key and
+# are view-cast back on load — a bit-identical round trip.
+_BF16_PREFIX = "bf16!"
+
+
+def _npz_arrays(prefix: str, arrays: dict) -> dict:
+    out = {}
+    for k, v in arrays.items():
+        a = np.asarray(v)
+        if a.dtype == np.dtype(jnp.bfloat16):
+            out[f"{prefix}::{_BF16_PREFIX}{k}"] = a.view(np.uint16)
+        else:
+            out[f"{prefix}::{k}"] = a
+    return out
+
+
+def _format_version(npz_arrays: dict) -> int:
+    """1 for plans any reader can restore; 2 when bf16 keys are present
+    (older readers would mis-restore them, so the version gate fires)."""
+    tag = f"::{_BF16_PREFIX}"
+    return 2 if any(tag in k for k in npz_arrays) else 1
+
+
+def _npz_restore(prefix: str, z) -> dict:
+    tag = f"{prefix}::"
+    out = {}
+    for k in z.files:
+        if not k.startswith(tag):
+            continue
+        name = k[len(tag):]
+        a = z[k]
+        if name.startswith(_BF16_PREFIX):
+            name = name[len(_BF16_PREFIX):]
+            a = a.view(np.dtype(jnp.bfloat16))
+        out[name] = jnp.asarray(a)
+    return out
 
 
 # ------------------------------ dense plans ---------------------------------
@@ -203,12 +246,12 @@ class SpmvPlan:
 
     # -- serialization -----------------------------------------------------
     def save(self, path) -> None:
-        header = {"format_version": PLAN_FORMAT_VERSION, "kind": "dense",
+        arrays = _npz_arrays("fmt", self.fmt)
+        header = {"format_version": _format_version(arrays), "kind": "dense",
                   "spec": self.spec, "graph": (None if self.graph_json is None
                                                else json.loads(self.graph_json)),
                   "target": self.target.spec_dict(),
                   "search_gflops": self.search_gflops}
-        arrays = {f"fmt::{k}": np.asarray(v) for k, v in self.fmt.items()}
         np.savez(path, __plan__=np.str_(json.dumps(header)), **arrays)
 
     @staticmethod
@@ -350,15 +393,15 @@ class ShardedSpmvPlan:
         return normalize_cost_analysis(compiled.cost_analysis())
 
     def save(self, path) -> None:
-        header = {"format_version": PLAN_FORMAT_VERSION, "kind": "sharded",
+        arrays = _npz_arrays("stack", self.stacks)
+        header = {"format_version": _format_version(arrays),
+                  "kind": "sharded",
                   "steps": json.loads(self.steps_json), "mode": self.mode,
                   "n_rows": self.n_rows, "n_cols": self.n_cols,
                   "nnz": self.nnz, "band_rows": self.band_rows,
                   "bounds": [list(b) for b in self.bounds],
                   "replicated_bytes": self.replicated_bytes,
                   "target": self.target.spec_dict()}
-        arrays = {f"stack::{k}": np.asarray(v)
-                  for k, v in self.stacks.items()}
         np.savez(path, __plan__=np.str_(json.dumps(header)), **arrays)
 
     load = staticmethod(SpmvPlan.load)
@@ -397,8 +440,7 @@ def load_plan(path, mesh=None) -> Union[SpmvPlan, ShardedSpmvPlan]:
                              f"{header['format_version']} > supported "
                              f"{PLAN_FORMAT_VERSION}")
         if header["kind"] == "dense":
-            fmt = {k[len("fmt::"):]: jnp.asarray(z[k])
-                   for k in z.files if k.startswith("fmt::")}
+            fmt = _npz_restore("fmt", z)
             return SpmvPlan(
                 fmt=fmt, spec_json=json.dumps(header["spec"]),
                 graph_json=(None if header["graph"] is None
@@ -406,8 +448,7 @@ def load_plan(path, mesh=None) -> Union[SpmvPlan, ShardedSpmvPlan]:
                 target=_target_from_dict(header["target"]),
                 search_gflops=header.get("search_gflops"))
         target = _target_from_dict(header["target"], mesh=mesh)
-        stacks = {k[len("stack::"):]: z[k]
-                  for k in z.files if k.startswith("stack::")}
+        stacks = _npz_restore("stack", z)
         if mesh is not None:
             n_saved = len(header["bounds"])
             n_mesh = dict(mesh.shape).get(target.axis_name)
@@ -443,8 +484,20 @@ def _as_search_config(budget, target: Target) -> SearchConfig:
         raise TypeError(f"budget must be a SearchConfig or seconds, got "
                         f"{type(budget).__name__}")
     bsz = target.batch_size if target.batch_size > 1 else cfg.batch_size
-    return dataclasses.replace(cfg, backend=target.backend,
-                               batch_size=max(bsz, 1))
+    cfg = dataclasses.replace(cfg, backend=target.backend,
+                              batch_size=max(bsz, 1))
+    # widen the SET_RESOURCES knob choices from the Target, but only when
+    # the budget left them at None ("auto") — an explicit tuple, even the
+    # single-default one, pins the knob and is respected as-is: pallas
+    # kernels have the fused megatile path, so the search tunes
+    # tiles_per_step; dtype="bfloat16" means both precisions are searched
+    # and the winner is picked per matrix.
+    if target.backend == "pallas" and cfg.tiles_per_step_choices is None:
+        cfg = dataclasses.replace(cfg, tiles_per_step_choices=(1, 4, 8))
+    if target.dtype == "bfloat16" and cfg.dtype_choices is None:
+        cfg = dataclasses.replace(cfg,
+                                  dtype_choices=("float32", "bfloat16"))
+    return cfg
 
 
 def _plan_from_program(prog, graph: Optional[OperatorGraph],
@@ -507,8 +560,13 @@ def compile(matrix: SparseMatrix, target: Optional[Target] = None,
     if target.mesh is None:
         if graph is not None:
             meta = run_graph(matrix, graph)
+            # Target.dtype overrides the storage dtype for fixed-graph
+            # compiles (searched compiles pick it via SET_RESOURCES)
             prog = build_program(meta, backend=target.backend,
-                                 interpret=target.interpret, jit=False)
+                                 interpret=target.interpret, jit=False,
+                                 storage_dtype=(target.dtype
+                                                if target.dtype != "float32"
+                                                else None))
             plan = _plan_from_program(prog, graph, target)
         else:
             cfg = _as_search_config(budget, target)
@@ -527,14 +585,16 @@ def compile(matrix: SparseMatrix, target: Optional[Target] = None,
                                    balance=target.balance,
                                    graph_for=lambda m: graph,
                                    backend=target.backend,
-                                   interpret=target.interpret)
+                                   interpret=target.interpret,
+                                   storage_dtype=target.dtype)
         elif budget is None:
             sprog = shard_map_spmv(matrix, target.mesh,
                                    axis_name=target.axis_name,
                                    mode=target.partition,
                                    balance=target.balance,
                                    backend=target.backend,
-                                   interpret=target.interpret)
+                                   interpret=target.interpret,
+                                   storage_dtype=target.dtype)
         else:
             if isinstance(budget, ShardedSearchConfig):
                 # full per-shard control (min_nnz_for_search, seeds, ...);

@@ -155,6 +155,11 @@ FEATURE_NAMES = [
     # irregular reductions become MXU contractions — the model needs both
     # to rank designs differently at different batch sizes.
     "batch_size", "bytes_per_out_flop", "mxu_mac_ratio",
+    # fused-combine / mixed-precision terms: bytes of post-hoc combine
+    # traffic the fused in-kernel combine eliminates (per output flop),
+    # and stored bytes relative to the all-fp32/int32 baseline (0.5-ish
+    # for bf16 vals + int16 cols) — the knobs SET_RESOURCES binds.
+    "combine_bytes_saved", "storage_bytes_ratio",
 ]
 
 _REDUCE_ONE_HOT = {"lane_total": (1, 0, 0, 0), "seg_scan": (0, 1, 0, 0),
@@ -176,6 +181,17 @@ def program_features(meta, program, batch_size: int = 1) -> np.ndarray:
       contraction); ONEHOT_MXU_RED always does (C*M one-hot MACs, times B
       when batched). High ratios mean compute-bound-on-MXU designs whose
       relative cost *drops* as B grows.
+
+    Two fused-combine / mixed-precision terms (read off the generated
+    program's kernel spec, no execution needed):
+
+    * ``combine_bytes_saved`` — fp32 partial-slab bytes (read + write)
+      the fused in-kernel combine eliminates, per useful output flop: a
+      step marked ``fused`` no longer round-trips its (tiles x rows)
+      partials through the ``jnp`` scatter pass;
+    * ``storage_bytes_ratio`` — stored format bytes over the all-fp32/
+      int32 baseline for the same element counts (1.0 for fp32 storage,
+      about 0.5 for bf16 vals + int16 cols).
     """
     from .metadata import EllTileLayout, SegTileLayout  # local import (cycle)
 
@@ -202,6 +218,24 @@ def program_features(meta, program, batch_size: int = 1) -> np.ndarray:
         if b.reduce is not None:
             red = red + np.array(_REDUCE_ONE_HOT[b.reduce.kind])
             comb_acc += int(b.reduce.combine == "grid_acc")
+    # fused-combine savings + storage narrowing, from the kernel spec/fmt
+    spec = getattr(program, "spec", None) or {}
+    fmt = getattr(program, "fmt", None) or {}
+    fused_partials = 0
+    for st in spec.get("steps", ()):
+        if not st.get("fused"):
+            continue
+        v = fmt.get(f"{st['key']}_vals")
+        if v is None:
+            continue
+        if st["kind"] == "ell":
+            fused_partials += int(v.shape[0]) * int(v.shape[1])  # T * R
+        else:
+            fused_partials += int(v.shape[0]) * int(st["seg_rows"])
+    combine_saved = 2.0 * 4.0 * fused_partials * bsz   # read+write, fp32
+    n_elems = sum(int(np.prod(np.shape(a))) for a in fmt.values())
+    storage_ratio = (program.stored_bytes / (4.0 * n_elems)
+                     if n_elems else 1.0)
     hist = " ".join(meta.history)
     return np.array([
         np.log10(nnz), np.log10(max(meta.n_rows, 1)),
@@ -218,4 +252,6 @@ def program_features(meta, program, batch_size: int = 1) -> np.ndarray:
         float(bsz),
         program.stored_bytes / (2.0 * nnz * bsz),
         mxu_macs / (2.0 * nnz * bsz),
+        combine_saved / (2.0 * nnz * bsz),
+        float(storage_ratio),
     ], dtype=np.float64)

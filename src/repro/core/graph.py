@@ -136,9 +136,26 @@ def run_graph(matrix: SparseMatrix, graph: OperatorGraph) -> MetadataSet:
             " branches")
     # run each branch chain on a single-block view, then re-join
     out_blocks = []
+    sub_metas = []
     for block, chain in zip(meta.blocks, graph.branch_chains):
         sub = dataclasses.replace(meta, blocks=(block,))
         for spec in chain:
             sub = apply_op(sub, spec)
         out_blocks.append(sub.blocks[0])
-    return meta.with_blocks(out_blocks, "JOIN")
+        sub_metas.append(sub)
+    joined = meta.with_blocks(out_blocks, "JOIN")
+    # resource knobs (SET_RESOURCES: tiles_per_step / storage_dtype) set
+    # inside a branch chain must survive the join. Both knobs are global
+    # to the generated program, so branches are merged: the widest
+    # megatile wins, and any branch requesting bf16 storage makes the
+    # whole plan bf16 (the DesignSpace always heads every branch with the
+    # same knob spec, so merged == per-branch there; the merge only
+    # matters for user-authored graphs that set a knob in one branch).
+    if sub_metas:
+        joined = dataclasses.replace(
+            joined,
+            tiles_per_step=max(s.tiles_per_step for s in sub_metas),
+            storage_dtype=("bfloat16"
+                           if any(s.storage_dtype == "bfloat16"
+                                  for s in sub_metas) else "float32"))
+    return joined

@@ -34,6 +34,19 @@ a 1-D x takes the classic SpMV path. The dispatch happens at trace time
 Model-Driven Format Compression (``compress.py``) runs here: fitted arrays
 are elided from the stored format and recomputed in-kernel; an affine rowmap
 upgrades the combine to GRID_ACC (direct output writes, no scatter).
+
+Fused-combine megatiles (pallas backend): when a step's output rows are
+provably contiguous — affine slope-1 rowmap for ELL, per-tile ascending
+row runs for the seg family — the step is marked ``fused`` and the
+generated kernel owns the whole combine: the output vector is one
+revisited resident block, ``tiles_per_step`` format tiles are processed
+per grid step, and the post-hoc ``jnp`` scatter pass disappears.
+
+Mixed-precision storage: ``storage_dtype="bfloat16"`` stores vals as bf16
+(and explicit cols arrays as int16 when ``n_cols`` fits), recorded per
+step under ``"store"``; kernels upcast in-register and accumulate fp32.
+Both knobs come from the MetadataSet (SET_RESOURCES — searchable) or the
+explicit ``plan_format``/``build_program`` overrides (Target-driven).
 """
 from __future__ import annotations
 
@@ -51,7 +64,10 @@ from .metadata import (Block, EllTileLayout, MetadataSet, SegTileLayout)
 __all__ = ["SpmvProgram", "build_program", "build_spmv", "plan_format",
            "build_kernel", "register_layout_planner", "SPEC_VERSION"]
 
-SPEC_VERSION = 1
+SPEC_VERSION = 2
+
+# explicit cols arrays narrow to int16 when every column index fits
+_INT16_MAX_COLS = 32767
 
 
 @dataclasses.dataclass
@@ -239,13 +255,84 @@ register_layout_planner(EllTileLayout)(_plan_ell_block)
 register_layout_planner(SegTileLayout)(_plan_seg_block)
 
 
-def plan_format(meta: MetadataSet, do_compress: bool = True
-                ) -> tuple[dict, dict]:
-    """Stage 1: pack format arrays and emit the JSON-able kernel spec."""
+def _contiguous_rowmap(rm: np.ndarray) -> bool:
+    """True when every tile's used slots are a prefix ascending by 1 from
+    slot 0 (rowmap[t, m] = rowmap[t, 0] + m) — the precondition for the
+    fused seg combine (dense accumulate at r0 instead of a scatter)."""
+    used = rm >= 0
+    if not used.any():
+        return True
+    prefix_ok = bool(np.all(used[:, 1:] <= used[:, :-1]))
+    idx = np.arange(rm.shape[1])
+    r0 = np.where(used[:, 0], rm[:, 0], 0)
+    vals_ok = bool(np.all(np.where(used, rm == r0[:, None] + idx[None, :],
+                                   True)))
+    return prefix_ok and vals_ok
+
+
+def _finalize_steps(fmt: dict, steps: list, n_cols: int, storage_dtype: str,
+                    fuse_combine: bool) -> None:
+    """Post-planner pass: mark fused-combine steps and narrow storage.
+
+    Runs centrally (not in the per-layout planners) so registered custom
+    planners keep their signature; unknown step kinds are left untouched.
+    """
+    for step in steps:
+        key = step["key"]
+        if step["kind"] == "ell":
+            # affine slope-1 rowmap: tile i owns rows [b0+i*R, b0+(i+1)*R)
+            # -> the fused kernel writes them in place, no combine pass
+            fused = bool(fuse_combine
+                         and step["combine"]["mode"] == "affine")
+            step["fused"] = fused
+            if fused:
+                step["report"]["combine"] = "fused(in-kernel)"
+        elif step["kind"] == "seg":
+            rm = np.asarray(fmt[f"{key}_rowmap"])
+            if fuse_combine and rm.size and _contiguous_rowmap(rm):
+                r0 = np.where(rm[:, 0] >= 0, rm[:, 0], 0).astype(np.int32)
+                fmt[f"{key}_r0"] = jnp.asarray(r0)
+                step["fused"] = True
+                # static slab size for the fused kernel's resident y block
+                step["fused_rows"] = int(r0.max()) + int(step["seg_rows"])
+                step["report"]["combine"] = "fused(carry)"
+            else:
+                step["fused"] = False
+        else:
+            continue
+        if storage_dtype == "bfloat16":
+            store = {"vals": "bfloat16"}
+            fmt[f"{key}_vals"] = jnp.asarray(fmt[f"{key}_vals"],
+                                             jnp.bfloat16)
+            cspec = step["cols"]
+            if cspec["mode"] == "array" and n_cols <= _INT16_MAX_COLS:
+                fmt[cspec["key"]] = jnp.asarray(fmt[cspec["key"]], jnp.int16)
+                store["cols"] = "int16"
+            step["store"] = store
+            step["report"]["store"] = "+".join(
+                f"{k}:{v}" for k, v in sorted(store.items()))
+
+
+def plan_format(meta: MetadataSet, do_compress: bool = True, *,
+                storage_dtype: str = None, tiles_per_step: int = None,
+                fuse_combine: bool = True) -> tuple[dict, dict]:
+    """Stage 1: pack format arrays and emit the JSON-able kernel spec.
+
+    ``storage_dtype`` / ``tiles_per_step`` default to the MetadataSet's
+    SET_RESOURCES decisions; pass them explicitly to override (the
+    ``Target.dtype`` plumbing in ``repro.compile``). ``fuse_combine=False``
+    disables the in-kernel combine (benchmark baseline: the historical
+    kernel + jnp-scatter path).
+    """
     for b in meta.blocks:
         if b.layout is None or b.reduce is None:
             raise ValueError("metadata not fully designed: run mapping and "
                              "implementing operators first")
+    sd = storage_dtype or getattr(meta, "storage_dtype", "float32")
+    if sd not in ("float32", "bfloat16"):
+        raise ValueError(f"unsupported storage_dtype {sd!r} "
+                         "(float32 | bfloat16)")
+    kts = int(tiles_per_step or getattr(meta, "tiles_per_step", 1) or 1)
     fmt: dict = {}
     steps: list = []
     reports: list = []
@@ -257,15 +344,21 @@ def plan_format(meta: MetadataSet, do_compress: bool = True
                 f"{type(block.layout).__name__}; register one with "
                 "repro.core.kernel_builder.register_layout_planner")
         planner(bi, block, fmt, steps, reports, do_compress)
+    _finalize_steps(fmt, steps, int(meta.n_cols), sd, fuse_combine)
     spec = {"version": SPEC_VERSION,
             "n_rows": int(meta.n_rows), "n_cols": int(meta.n_cols),
             "nnz": int(meta.nnz), "padded_nnz": int(meta.padded_nnz()),
+            "tiles_per_step": max(kts, 1), "storage_dtype": sd,
             "history": list(meta.history), "steps": steps}
     return fmt, spec
 
 
+def _f32(a):
+    return a.astype(jnp.float32)
+
+
 def _run_ell_step(step: dict, fmt: dict, x, y, n_rows: int,
-                  backend: str, interpret: bool):
+                  backend: str, interpret: bool, tiles_per_step: int = 1):
     rhs = x.shape[1:]
     key = step["key"]
     vals = fmt[f"{key}_vals"]
@@ -276,6 +369,13 @@ def _run_ell_step(step: dict, fmt: dict, x, y, n_rows: int,
     comb = step["combine"]
     if backend == "pallas":
         from repro.kernels import ops as kops  # lazy: keeps core importable
+        if step.get("fused") and comb["mode"] == "affine":
+            # fused-combine megatile kernel: the finished (n_rows[, B])
+            # slab comes back — one vector add instead of a scatter pass
+            op = kops.ell_spmm_fused if rhs else kops.ell_spmv_fused
+            slab = op(vals, cols, x, row0=comb["b0"], n_rows=n_rows,
+                      tiles_per_step=tiles_per_step, interpret=interpret)
+            return y + slab
         if comb["mode"] == "affine" and comb["direct"]:
             # direct-write kernel: output slab, no scatter
             op = kops.ell_spmm_direct if rhs else kops.ell_spmv_direct
@@ -283,9 +383,11 @@ def _run_ell_step(step: dict, fmt: dict, x, y, n_rows: int,
             op = kops.ell_spmm if rhs else kops.ell_spmv
         partial = op(vals, cols, x, interpret=interpret)
     elif rhs:
-        partial = jnp.einsum("trw,trwb->trb", vals, x[cols])
+        partial = jnp.einsum("trw,trwb->trb", _f32(vals),
+                             _f32(x[cols.astype(jnp.int32)]))
     else:
-        partial = jnp.einsum("trw,trw->tr", vals, x[cols])
+        partial = jnp.einsum("trw,trw->tr", _f32(vals),
+                             _f32(x[cols.astype(jnp.int32)]))
     flat = partial.reshape((-1,) + rhs)
     if comb["mode"] == "rowmap":
         rm = fmt[comb["key"]].reshape(-1)
@@ -299,7 +401,7 @@ def _run_ell_step(step: dict, fmt: dict, x, y, n_rows: int,
 
 
 def _run_seg_step(step: dict, fmt: dict, x, y, n_rows: int,
-                  backend: str, interpret: bool):
+                  backend: str, interpret: bool, tiles_per_step: int = 1):
     rhs = x.shape[1:]
     key = step["key"]
     kind = step["reduce"]
@@ -313,9 +415,11 @@ def _run_seg_step(step: dict, fmt: dict, x, y, n_rows: int,
         # stored directly in the format (padded entries carry val=0 and a
         # valid row -> no masking).
         if rhs:
-            prod = (vals[..., None] * x[cols]).reshape((-1,) + rhs)
+            prod = (_f32(vals)[..., None]
+                    * _f32(x[cols.astype(jnp.int32)])).reshape((-1,) + rhs)
         else:
-            prod = (vals * x[cols]).reshape(-1)
+            prod = (_f32(vals)
+                    * _f32(x[cols.astype(jnp.int32)])).reshape(-1)
         rows = fmt[f"{key}_rows"].reshape(-1)
         return y + jax.ops.segment_sum(
             prod, rows, num_segments=n_rows,
@@ -327,6 +431,15 @@ def _run_seg_step(step: dict, fmt: dict, x, y, n_rows: int,
     if backend == "pallas":
         from repro.kernels import ops as kops
         pk = "seg_scan" if kind == "gmem_atom" else kind
+        if step.get("fused") and f"{key}_r0" in fmt:
+            # fused carry-last-segment kernel: straddled rows finish
+            # in-kernel on the resident y block — no scatter pass
+            op = kops.seg_spmm_fused if rhs else kops.seg_spmv_fused
+            slab = op(vals, cols, local, seg_end, fmt[f"{key}_r0"], x,
+                      seg_rows, n_rows=n_rows,
+                      n_out=step.get("fused_rows", n_rows), mode=pk,
+                      tiles_per_step=tiles_per_step, interpret=interpret)
+            return y + slab
         op = kops.seg_spmm if rhs else kops.seg_spmv
         partial = op(vals, cols, local, seg_end, x,
                      seg_rows, mode=pk, interpret=interpret)
@@ -340,11 +453,13 @@ def _run_seg_step(step: dict, fmt: dict, x, y, n_rows: int,
 
 
 def run_spec_step(step: dict, fmt: dict, x, y, n_rows: int,
-                  backend: str, interpret: bool):
+                  backend: str, interpret: bool, tiles_per_step: int = 1):
     """Accumulate one spec step's contribution into y (shared with dist)."""
     if step["kind"] == "ell":
-        return _run_ell_step(step, fmt, x, y, n_rows, backend, interpret)
-    return _run_seg_step(step, fmt, x, y, n_rows, backend, interpret)
+        return _run_ell_step(step, fmt, x, y, n_rows, backend, interpret,
+                             tiles_per_step)
+    return _run_seg_step(step, fmt, x, y, n_rows, backend, interpret,
+                         tiles_per_step)
 
 
 def build_kernel(spec: dict, backend: str = "jax",
@@ -352,6 +467,7 @@ def build_kernel(spec: dict, backend: str = "jax",
     """Stage 2: interpret a kernel spec into the runnable ``fn(fmt, x)``."""
     n_rows = spec["n_rows"]
     steps = spec["steps"]
+    tiles_per_step = int(spec.get("tiles_per_step", 1))
 
     def run(fmt, x):
         # trace-time dispatch: 1-D x -> SpMV kernels, (n_cols, B) -> fused
@@ -359,7 +475,8 @@ def build_kernel(spec: dict, backend: str = "jax",
         rhs = x.shape[1:]
         y = jnp.zeros((n_rows,) + rhs, dtype=jnp.float32)
         for step in steps:
-            y = run_spec_step(step, fmt, x, y, n_rows, backend, interpret)
+            y = run_spec_step(step, fmt, x, y, n_rows, backend, interpret,
+                              tiles_per_step)
         return y
 
     return run
@@ -367,9 +484,22 @@ def build_kernel(spec: dict, backend: str = "jax",
 
 def build_program(meta: MetadataSet, backend: str = "jax",
                   interpret: bool = True, do_compress: bool = True,
-                  jit: bool = True) -> SpmvProgram:
-    """Generate the SpMV program for a designed MetadataSet."""
-    fmt, spec = plan_format(meta, do_compress=do_compress)
+                  jit: bool = True, storage_dtype: str = None,
+                  tiles_per_step: int = None,
+                  fuse_combine: bool = True) -> SpmvProgram:
+    """Generate the SpMV program for a designed MetadataSet.
+
+    ``storage_dtype`` / ``tiles_per_step`` override the MetadataSet's
+    SET_RESOURCES knobs (see :func:`plan_format`); ``fuse_combine=False``
+    forces the historical kernel + jnp-scatter combine (benchmark
+    baseline). Only the pallas backend implements the in-kernel combine,
+    so jax-backend programs are planned unfused — their reports and cost
+    features then describe the combine they actually execute."""
+    fmt, spec = plan_format(meta, do_compress=do_compress,
+                            storage_dtype=storage_dtype,
+                            tiles_per_step=tiles_per_step,
+                            fuse_combine=(fuse_combine
+                                          and backend == "pallas"))
     descriptor = {"backend": backend,
                   "blocks": [s["report"] for s in spec["steps"]],
                   "padded_nnz": spec["padded_nnz"],

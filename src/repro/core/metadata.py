@@ -161,13 +161,21 @@ class Block:
 
 @dataclasses.dataclass(frozen=True)
 class MetadataSet:
-    """The full Matrix Metadata Set: global info + branch blocks + history."""
+    """The full Matrix Metadata Set: global info + branch blocks + history.
+
+    ``tiles_per_step`` / ``storage_dtype`` are the SET_RESOURCES runtime
+    knobs (megatile width of the fused kernels; bf16-vs-fp32 format
+    storage) — design decisions the search binds like any other parameter;
+    the kernel generator reads them in ``plan_format``.
+    """
 
     n_rows: int
     n_cols: int
     blocks: tuple[Block, ...]
     history: tuple[str, ...] = ()
     compressed: bool = False
+    tiles_per_step: int = 1
+    storage_dtype: str = "float32"
 
     @property
     def nnz(self) -> int:

@@ -559,7 +559,15 @@ class LaneNnzBlock(Operator):
 
 @register_operator("SET_RESOURCES")
 class SetResources(Operator):
-    """Runtime knobs: lane count and execution backend."""
+    """Runtime knobs: lanes, fused-kernel megatile width, storage dtype.
+
+    ``tiles_per_step`` (format tiles per fused-kernel grid step) and
+    ``dtype`` ("float32" | "bfloat16" vals storage, fp32 accumulate) are
+    recorded on the MetadataSet and consumed by ``plan_format`` — the
+    DesignSpace weaves SET_RESOURCES specs into candidate graphs when the
+    SearchConfig enables non-default choices, so the search picks them
+    per matrix like any other design decision.
+    """
 
     name, stage = "SET_RESOURCES", STAGE_MAPPING
 
@@ -573,7 +581,15 @@ class SetResources(Operator):
 
     @staticmethod
     def apply(meta, spec):
-        return meta.with_blocks(list(meta.blocks), spec.label())
+        out = meta.with_blocks(list(meta.blocks), spec.label())
+        kw = {}
+        k = spec.param("tiles_per_step")
+        if k is not None:
+            kw["tiles_per_step"] = max(int(k), 1)
+        d = spec.param("dtype")
+        if d is not None:
+            kw["storage_dtype"] = str(d)
+        return dataclasses.replace(out, **kw) if kw else out
 
 
 # ----------------------------- implementing -------------------------------

@@ -203,6 +203,26 @@ class DesignSpace:
     def structures(self) -> list[Structure]:
         return list(self._structures)
 
+    # -- resource knobs (SET_RESOURCES) woven into every candidate --
+    def _knob_specs(self):
+        """SET_RESOURCES variants from the config's knob choices.
+
+        Empty with the default choices — candidate graphs are then
+        byte-identical to the pre-knob space (strategy golden-trace
+        parity). Non-default choices (``repro.compile`` widens them from
+        the Target) multiply every bound structure by the knob grid, so
+        megatile width and storage dtype are searched per matrix like any
+        other design decision."""
+        from .registry import OpSpec
+        ks = tuple(getattr(self.cfg, "tiles_per_step_choices", (1,)) or (1,))
+        ds = tuple(getattr(self.cfg, "dtype_choices",
+                           ("float32",)) or ("float32",))
+        if ks == (1,) and ds == ("float32",):
+            return ()
+        return tuple(OpSpec.make("SET_RESOURCES", tiles_per_step=int(k),
+                                 dtype=str(d))
+                     for k in ks for d in ds)
+
     # -- parameter binding --
     def bind(self, structure: Structure, grid: str) -> list:
         """Cartesian product of per-op parameter grids -> concrete graphs."""
@@ -225,6 +245,14 @@ class DesignSpace:
             for body in itertools.product(*chain_combos):
                 graphs.append(OperatorGraph(conv, tuple(body),
                                             shared=structure.shared))
+        knobs = self._knob_specs()
+        if knobs:
+            # the same knob spec heads every branch chain of a variant
+            # (run_graph propagates it across the branched join)
+            graphs = [OperatorGraph(g.converting,
+                                    tuple((ks,) + c for c in g.branch_chains),
+                                    shared=g.shared)
+                      for g in graphs for ks in knobs]
         return graphs
 
     # -- model features without timing --

@@ -190,11 +190,13 @@ def _canon_ell(vals: np.ndarray, cols: np.ndarray,
     cols = cols.reshape(T, Rp, kw, _ELL_W0).transpose(0, 2, 1, 3)
     rowmap = np.repeat(rowmap, kw, axis=0)
     # split the row axis: a pure reshape (rows stay whole per chunk)
+    # (dtypes are preserved: bf16-stored vals / int16 cols keep their
+    # narrowed width through the stacking, shrinking per-device bytes)
     vals = vals.reshape(T * kw * kr, _ELL_R0, _ELL_W0)
     cols = cols.reshape(T * kw * kr, _ELL_R0, _ELL_W0)
     rowmap = rowmap.reshape(T * kw * kr, _ELL_R0)
-    return {"vals": np.ascontiguousarray(vals.astype(np.float32)),
-            "cols": np.ascontiguousarray(cols.astype(np.int32)),
+    return {"vals": np.ascontiguousarray(vals),
+            "cols": np.ascontiguousarray(cols),
             "rowmap": np.ascontiguousarray(rowmap)}
 
 
@@ -214,8 +216,10 @@ def _shard_family_parts(program: Optional[SpmvProgram]) -> dict:
     fmt = {k: np.asarray(v) for k, v in program.fmt.items()}
     for step in program.spec["steps"]:
         key = step["key"]
-        vals = fmt[f"{key}_vals"]
-        cols = materialize_cols(step["cols"], fmt).astype(np.int32)
+        vals = fmt[f"{key}_vals"]          # narrowed dtype preserved
+        cols = materialize_cols(step["cols"], fmt)
+        if cols.dtype != np.int16:          # model-elided cols come back
+            cols = cols.astype(np.int32)    # int64; int16 storage stays
         if step["kind"] == "ell":
             comb = step["combine"]
             if comb["mode"] == "rowmap":
@@ -234,7 +238,7 @@ def _shard_family_parts(program: Optional[SpmvProgram]) -> dict:
         else:
             S, L = int(vals.shape[1]), int(vals.shape[2])
             fam = ("seg", step["reduce"], S, L)
-            part = {"vals": vals.astype(np.float32), "cols": cols,
+            part = {"vals": vals, "cols": cols,
                     "rowmap": fmt[f"{key}_rowmap"].astype(np.int32)}
             for name in ("local", "end", "rows"):
                 if f"{key}_{name}" in fmt:
@@ -243,14 +247,24 @@ def _shard_family_parts(program: Optional[SpmvProgram]) -> dict:
     return out
 
 
+def _family_dtype(name: str, parts: list[dict]) -> np.dtype:
+    """One dtype per stacked family array: keep the narrowed storage when
+    every shard agrees, otherwise widen to the fp32/int32 baseline."""
+    dts = {np.dtype(p[name].dtype) for p in parts}
+    if len(dts) == 1:
+        return next(iter(dts))
+    return np.dtype(np.float32) if name == "vals" else np.dtype(np.int32)
+
+
 def _concat_shard_family(parts: list[dict], names: list[str],
-                         rw: Optional[tuple], seg_rows: int) -> dict:
+                         rw: Optional[tuple], seg_rows: int,
+                         dtypes: dict) -> dict:
     """Pad each part to the family geometry and concatenate along tiles."""
     pieces = {n: [] for n in names}
     for part in parts:
         T = part["vals"].shape[0]
         for n in names:
-            a = part[n]
+            a = part[n].astype(dtypes[n], copy=False)
             if rw is not None:                      # ell: (T, R, W) family
                 shape = ((T,) + rw if n != "rowmap" else (T, rw[0]))
             elif n in ("rowmap", "end"):            # seg descriptor rows
@@ -299,8 +313,10 @@ def pack_operand_format(programs: Sequence[Optional[SpmvProgram]]
                     "cols": {"mode": "array", "key": f"{gkey}_cols"},
                     "report": {"kernel": reduce_kind, "family": "seg",
                                "chunk": (S, L), "seg_rows": int(seg_rows)}}
+        dtypes = {n: _family_dtype(n, all_parts) for n in names}
         shard_arrays = [
-            _concat_shard_family(sh.get(fam, []), names, rw, seg_rows)
+            _concat_shard_family(sh.get(fam, []), names, rw, seg_rows,
+                                 dtypes)
             if sh.get(fam) else None
             for sh in per_shard]
         t_max = max(a["vals"].shape[0] for a in shard_arrays if a is not None)
@@ -312,8 +328,7 @@ def pack_operand_format(programs: Sequence[Optional[SpmvProgram]]
             for a in shard_arrays:
                 if a is None:
                     full.append(np.full((t_max,) + tail, _FILL[n],
-                                        dtype=np.float32 if n == "vals"
-                                        else np.int32))
+                                        dtype=dtypes[n]))
                 else:
                     full.append(_pad_to(a[n], (t_max,) + tail, _FILL[n]))
             stacks[f"{gkey}_{n}"] = np.stack(full)
@@ -494,14 +509,19 @@ def shard_map_spmv(m: SparseMatrix, mesh, axis_name: str = "data",
                    graph_for: Callable[[SparseMatrix], OperatorGraph]
                    = default_shard_graph,
                    backend: str = "jax",
-                   interpret: bool = True) -> ShardedSpmvProgram:
+                   interpret: bool = True,
+                   storage_dtype: str = "float32") -> ShardedSpmvProgram:
     """Search-free sharded SpMV: partition + per-shard heuristic design.
 
     ``dist.search.dist_search`` is the searched variant (one AlphaSparse
     search per shard); this one is the cheap path for serving and tests.
+    ``storage_dtype="bfloat16"`` narrows every per-shard format (bf16
+    vals, int16 cols where n_cols fits) — the family stacks preserve the
+    narrowed dtypes, so per-device bytes shrink accordingly.
     """
     n_shards = _axis_size(mesh, axis_name)
     shards = partition_matrix(m, n_shards, mode=mode, balance=balance)
+    sd = None if storage_dtype == "float32" else storage_dtype
     programs = []
     for s in shards:
         if s.is_empty:
@@ -509,6 +529,7 @@ def shard_map_spmv(m: SparseMatrix, mesh, axis_name: str = "data",
         else:
             meta = run_graph(s.matrix, graph_for(s.matrix))
             # jit=False: only the packed fmt + spec feed the stacked body
-            programs.append(build_program(meta, backend=backend, jit=False))
+            programs.append(build_program(meta, backend=backend, jit=False,
+                                          storage_dtype=sd))
     return build_sharded_spmv(shards, programs, mesh, axis_name,
                               backend=backend, interpret=interpret)

@@ -16,12 +16,28 @@ Block shapes: vals/cols blocks are (1, R, W); choose R a multiple of 8
 (sublanes) and W a multiple of 128 (lanes) via TILE_ROW_BLOCK / LANE_PAD
 for full VREG utilisation — the search engine tunes exactly these.
 
+Mixed precision: vals may be stored bfloat16 and cols int16 (the format
+generator narrows them when ``storage_dtype='bfloat16'``); every kernel
+upcasts in-register and accumulates in float32 — partials and outputs are
+always float32, halving format-stream traffic without losing accumulation
+precision.
+
 Multi-RHS (SpMM) variants: x arrives as an (n_cols, B) tile — column b is
 the b-th right-hand side. The format arrays stream through VMEM exactly
 once for all B columns (1/B traffic amortisation vs. vmapping the 1-RHS
 kernel), the gather widens to (R, W, B), and the per-row reduction becomes
 a batched (R,W)x(R,W,B)->(R,B) ``dot_general`` contraction that the TPU
 routes through the MXU instead of the VPU.
+
+Fused-combine megatile variants (``*_fused``): the whole output vector is
+one revisited block (index_map ``t -> 0``) that stays resident across the
+sequential grid; each step processes ``tiles_per_step`` format tiles (the
+megatile — one x read and one output block amortised over K tiles) and
+writes its rows in place via ``pl.ds``, so the post-hoc scatter/add pass
+over tile partials disappears — the kernel owns the whole SpMV. Valid
+when Model-Driven Compression proved the rowmap affine with slope 1
+(tile t*K+k owns rows [row0 + (t*K+k)*R, ...)); the kernel builder
+checks and falls back to the scatter combine otherwise.
 """
 from __future__ import annotations
 
@@ -31,23 +47,33 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["ell_spmv_pallas", "ell_spmv_direct_pallas",
-           "ell_spmm_pallas", "ell_spmm_direct_pallas"]
+__all__ = ["ell_spmv_pallas", "ell_spmv_direct_pallas", "ell_spmv_fused_pallas",
+           "ell_spmm_pallas", "ell_spmm_direct_pallas", "ell_spmm_fused_pallas"]
+
+
+def _f32(a):
+    """Upcast a (possibly bf16-stored) operand to the fp32 compute type."""
+    return a.astype(jnp.float32)
+
+
+def _i32(a):
+    """Upcast (possibly int16-stored) indices for the gather."""
+    return a.astype(jnp.int32)
 
 
 def _ell_kernel(x_ref, vals_ref, cols_ref, out_ref):
     """One tile: out[r] = sum_w vals[r, w] * x[cols[r, w]]."""
-    vals = vals_ref[0]              # (R, W)
-    cols = cols_ref[0]              # (R, W)
+    vals = _f32(vals_ref[0])        # (R, W)
+    cols = _i32(cols_ref[0])        # (R, W)
     x = x_ref[...]                  # (n_cols,) VMEM-resident
-    gathered = jnp.take(x, cols, axis=0)
+    gathered = _f32(jnp.take(x, cols, axis=0))
     out_ref[0, :] = jnp.sum(vals * gathered, axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def ell_spmv_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
                     interpret: bool = True) -> jax.Array:
-    """vals, cols: (T, R, W); x: (n_cols,) -> partials (T, R)."""
+    """vals, cols: (T, R, W); x: (n_cols,) -> fp32 partials (T, R)."""
     T, R, W = vals.shape
     n_cols = x.shape[0]
     return pl.pallas_call(
@@ -59,7 +85,7 @@ def ell_spmv_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
             pl.BlockSpec((1, R, W), lambda t: (t, 0, 0)),  # cols tile
         ],
         out_specs=pl.BlockSpec((1, R), lambda t: (t, 0)),
-        out_shape=jax.ShapeDtypeStruct((T, R), vals.dtype),
+        out_shape=jax.ShapeDtypeStruct((T, R), jnp.float32),
         interpret=interpret,
     )(x, vals, cols)
 
@@ -70,10 +96,10 @@ def _ell_direct_kernel(x_ref, vals_ref, cols_ref, y_ref):
     Valid only when Model-Driven Compression proved the rowmap affine with
     slope 1 (tile t owns rows [t*R, (t+1)*R)) — the kernel builder checks.
     """
-    vals = vals_ref[0]
-    cols = cols_ref[0]
+    vals = _f32(vals_ref[0])
+    cols = _i32(cols_ref[0])
     x = x_ref[...]
-    y_ref[...] = jnp.sum(vals * jnp.take(x, cols, axis=0), axis=1)
+    y_ref[...] = jnp.sum(vals * _f32(jnp.take(x, cols, axis=0)), axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -91,7 +117,7 @@ def ell_spmv_direct_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
             pl.BlockSpec((1, R, W), lambda t: (t, 0, 0)),
         ],
         out_specs=pl.BlockSpec((R,), lambda t: (t,)),
-        out_shape=jax.ShapeDtypeStruct((T * R,), vals.dtype),
+        out_shape=jax.ShapeDtypeStruct((T * R,), jnp.float32),
         interpret=interpret,
     )(x, vals, cols)
 
@@ -102,12 +128,13 @@ def _ell_spmm_contract(vals, cols, x):
     """out[r, b] = sum_w vals[r, w] * x[cols[r, w], b].
 
     One gather of the (n_cols, B) activation tile -> (R, W, B), then a
-    batched-over-R contraction of W against B on the MXU.
+    batched-over-R contraction of W against B on the MXU. Accumulates and
+    returns in float32 whatever the storage dtypes.
     """
-    gathered = jnp.take(x, cols, axis=0)          # (R, W, B)
+    gathered = jnp.take(x, _i32(cols), axis=0)    # (R, W, B)
     return jax.lax.dot_general(
-        vals, gathered, (((1,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32).astype(vals.dtype)
+        _f32(vals), _f32(gathered), (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
 
 
 def _ell_spmm_kernel(x_ref, vals_ref, cols_ref, out_ref):
@@ -118,7 +145,7 @@ def _ell_spmm_kernel(x_ref, vals_ref, cols_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def ell_spmm_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
                     interpret: bool = True) -> jax.Array:
-    """vals, cols: (T, R, W); x: (n_cols, B) -> partials (T, R, B)."""
+    """vals, cols: (T, R, W); x: (n_cols, B) -> fp32 partials (T, R, B)."""
     T, R, W = vals.shape
     n_cols, B = x.shape
     return pl.pallas_call(
@@ -130,7 +157,7 @@ def ell_spmm_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
             pl.BlockSpec((1, R, W), lambda t: (t, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, R, B), lambda t: (t, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((T, R, B), vals.dtype),
+        out_shape=jax.ShapeDtypeStruct((T, R, B), jnp.float32),
         interpret=interpret,
     )(x, vals, cols)
 
@@ -158,6 +185,122 @@ def ell_spmm_direct_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
             pl.BlockSpec((1, R, W), lambda t: (t, 0, 0)),
         ],
         out_specs=pl.BlockSpec((R, B), lambda t: (t, 0)),
-        out_shape=jax.ShapeDtypeStruct((T * R, B), vals.dtype),
+        out_shape=jax.ShapeDtypeStruct((T * R, B), jnp.float32),
         interpret=interpret,
     )(x, vals, cols)
+
+
+# ----------------------- fused-combine megatile kernels ----------------------
+
+def _ell_fused_kernel(x_ref, vals_ref, cols_ref, y_ref, *, row0: int):
+    """Megatile step: K tiles' rows written straight into the resident y.
+
+    The output block is the WHOLE y vector, revisited by every grid step
+    (index_map t -> 0): TPU grid iteration is sequential per core, so the
+    block stays resident and step t may read what step t-1 wrote. Step 0
+    zeroes it; each step then writes its K*R rows in place — the combine
+    lives inside the kernel, no second pass over tile partials.
+    """
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        y_ref[...] = jnp.zeros(y_ref.shape, y_ref.dtype)
+
+    K, R, _ = vals_ref.shape
+    x = x_ref[...]
+    for k in range(K):                      # static unroll: the megatile
+        vals = _f32(vals_ref[k])
+        cols = _i32(cols_ref[k])
+        partial = jnp.sum(vals * _f32(jnp.take(x, cols, axis=0)), axis=1)
+        # affine slope-1 rowmap: tile t*K+k owns exactly these R rows
+        y_ref[pl.ds(row0 + (t * K + k) * R, R)] = partial
+
+
+def _ell_spmm_fused_kernel(x_ref, vals_ref, cols_ref, y_ref, *, row0: int):
+    """Fused megatile SpMM: same scheme, (R, B) row blocks per tile."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        y_ref[...] = jnp.zeros(y_ref.shape, y_ref.dtype)
+
+    K, R, _ = vals_ref.shape
+    x = x_ref[...]
+    for k in range(K):
+        partial = _ell_spmm_contract(vals_ref[k], cols_ref[k], x)
+        y_ref[pl.ds(row0 + (t * K + k) * R, R), :] = partial
+
+
+def _pad_tiles(vals, cols, K):
+    """Round the tile count up to a multiple of K with all-zero padding
+    tiles (val=0 -> zero partials written into rows past the real slab)."""
+    T = vals.shape[0]
+    Tp = -(-T // K) * K
+    if Tp != T:
+        pad = ((0, Tp - T),) + ((0, 0),) * (vals.ndim - 1)
+        vals = jnp.pad(vals, pad)
+        cols = jnp.pad(cols, pad)
+    return vals, cols, Tp
+
+
+@functools.partial(jax.jit, static_argnames=("row0", "n_rows",
+                                             "tiles_per_step", "interpret"))
+def ell_spmv_fused_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
+                          *, n_rows: int, row0: int = 0,
+                          tiles_per_step: int = 1,
+                          interpret: bool = True) -> jax.Array:
+    """Fused-combine SpMV: (T, R, W) tiles -> the finished (n_rows,) y.
+
+    Requires the affine slope-1 rowmap (rows row0 + i*R + r). Processes
+    ``tiles_per_step`` tiles per grid step; the output vector is one
+    revisited VMEM-resident block, so no scatter/add pass remains outside
+    the kernel.
+    """
+    T, R, W = vals.shape
+    # clamp: a short bucket must not be padded past its own tile count
+    # (T=1 megatiled by 4 would quadruple its work)
+    K = max(min(int(tiles_per_step), T), 1)
+    vals, cols, Tp = _pad_tiles(vals, cols, K)
+    ny = max(int(n_rows), row0 + Tp * R)
+    n_cols = x.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_ell_fused_kernel, row0=row0),
+        grid=(Tp // K,),
+        in_specs=[
+            pl.BlockSpec((n_cols,), lambda t: (0,)),
+            pl.BlockSpec((K, R, W), lambda t: (t, 0, 0)),
+            pl.BlockSpec((K, R, W), lambda t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ny,), lambda t: (0,)),   # revisited block
+        out_shape=jax.ShapeDtypeStruct((ny,), jnp.float32),
+        interpret=interpret,
+    )(x, vals, cols)
+    return out[:n_rows]
+
+
+@functools.partial(jax.jit, static_argnames=("row0", "n_rows",
+                                             "tiles_per_step", "interpret"))
+def ell_spmm_fused_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
+                          *, n_rows: int, row0: int = 0,
+                          tiles_per_step: int = 1,
+                          interpret: bool = True) -> jax.Array:
+    """Fused-combine SpMM: x (n_cols, B) -> the finished (n_rows, B) y."""
+    T, R, W = vals.shape
+    K = max(min(int(tiles_per_step), T), 1)
+    vals, cols, Tp = _pad_tiles(vals, cols, K)
+    ny = max(int(n_rows), row0 + Tp * R)
+    n_cols, B = x.shape
+    out = pl.pallas_call(
+        functools.partial(_ell_spmm_fused_kernel, row0=row0),
+        grid=(Tp // K,),
+        in_specs=[
+            pl.BlockSpec((n_cols, B), lambda t: (0, 0)),
+            pl.BlockSpec((K, R, W), lambda t: (t, 0, 0)),
+            pl.BlockSpec((K, R, W), lambda t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ny, B), lambda t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ny, B), jnp.float32),
+        interpret=interpret,
+    )(x, vals, cols)
+    return out[:n_rows]

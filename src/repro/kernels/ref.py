@@ -2,7 +2,10 @@
 
 These are the ground truth the kernel tests sweep against
 (``tests/test_kernels.py``) and double as the CPU fast path used by the
-kernel builder's ``backend='jax'``.
+kernel builder's ``backend='jax'``. Like the kernels, they upcast
+mixed-precision storage (bfloat16 vals, int16 cols) and accumulate in
+float32, so a bf16-stored format compared against its fp32 twin differs
+only by the storage rounding, never by accumulation error.
 """
 from __future__ import annotations
 
@@ -13,13 +16,21 @@ __all__ = ["ell_spmv_ref", "ell_spmv_direct_ref", "seg_spmv_ref",
            "ell_spmm_ref", "ell_spmm_direct_ref", "seg_spmm_ref"]
 
 
+def _f32(a):
+    return a.astype(jnp.float32)
+
+
+def _gather(x, cols):
+    return _f32(x[cols.astype(jnp.int32)])
+
+
 def ell_spmv_ref(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
     """Row-per-lane padded-tile SpMV partials.
 
-    vals, cols: (T, R, W); x: (n_cols,) -> partials (T, R).
+    vals, cols: (T, R, W); x: (n_cols,) -> fp32 partials (T, R).
     Padded entries must carry val=0 (their gathered x value is ignored).
     """
-    return jnp.einsum("trw,trw->tr", vals, x[cols])
+    return jnp.einsum("trw,trw->tr", _f32(vals), _gather(x, cols))
 
 
 def ell_spmv_direct_ref(vals, cols, x) -> jax.Array:
@@ -33,7 +44,7 @@ def seg_spmv_ref(vals, cols, local_row, seg_end, x, seg_rows: int,
     """NNZ-split tile SpMV partials.
 
     vals/cols/local_row: (T, S, L); seg_end: (T, M) exclusive in-tile end
-    positions; returns per-tile row partials (T, M).
+    positions; returns per-tile fp32 row partials (T, M).
 
     mode='onehot_mxu': products x one-hot(local_row) matmul (MXU path).
     mode='seg_scan'  : in-tile cumulative sum gathered at segment ends
@@ -41,10 +52,10 @@ def seg_spmv_ref(vals, cols, local_row, seg_end, x, seg_rows: int,
     Both are mathematically identical; tests assert they agree.
     """
     T = vals.shape[0]
-    prod = (vals * x[cols]).reshape(T, -1)
+    prod = (_f32(vals) * _gather(x, cols)).reshape(T, -1)
     if mode == "onehot_mxu":
-        onehot = jax.nn.one_hot(local_row.reshape(T, -1), seg_rows,
-                                dtype=vals.dtype)
+        onehot = jax.nn.one_hot(local_row.reshape(T, -1).astype(jnp.int32),
+                                seg_rows, dtype=jnp.float32)
         return jnp.einsum("tc,tcm->tm", prod, onehot)
     cs = jnp.cumsum(prod, axis=1)
     # g[t, m] = inclusive cumsum at the last element of segment m
@@ -60,8 +71,8 @@ def seg_spmv_ref(vals, cols, local_row, seg_end, x, seg_rows: int,
 
 def ell_spmm_ref(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
     """Fused multi-RHS partials: vals, cols (T, R, W); x (n_cols, B)
-    -> (T, R, B). Column b of x is the b-th right-hand side."""
-    return jnp.einsum("trw,trwb->trb", vals, x[cols])
+    -> fp32 (T, R, B). Column b of x is the b-th right-hand side."""
+    return jnp.einsum("trw,trwb->trb", _f32(vals), _gather(x, cols))
 
 
 def ell_spmm_direct_ref(vals, cols, x) -> jax.Array:
@@ -73,13 +84,13 @@ def ell_spmm_direct_ref(vals, cols, x) -> jax.Array:
 def seg_spmm_ref(vals, cols, local_row, seg_end, x, seg_rows: int,
                  mode: str = "seg_scan") -> jax.Array:
     """Fused multi-RHS seg partials: vals/cols/local_row (T, S, L);
-    x (n_cols, B) -> (T, M, B). Same two reduction modes as 1-RHS."""
+    x (n_cols, B) -> fp32 (T, M, B). Same two reduction modes as 1-RHS."""
     T = vals.shape[0]
     B = x.shape[1]
-    prod = (vals[..., None] * x[cols]).reshape(T, -1, B)      # (T, C, B)
+    prod = (_f32(vals)[..., None] * _gather(x, cols)).reshape(T, -1, B)
     if mode == "onehot_mxu":
-        onehot = jax.nn.one_hot(local_row.reshape(T, -1), seg_rows,
-                                dtype=vals.dtype)
+        onehot = jax.nn.one_hot(local_row.reshape(T, -1).astype(jnp.int32),
+                                seg_rows, dtype=jnp.float32)
         return jnp.einsum("tcb,tcm->tmb", prod, onehot)
     cs = jnp.cumsum(prod, axis=1)
     end = seg_end.astype(jnp.int32)

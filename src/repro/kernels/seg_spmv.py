@@ -17,7 +17,12 @@ Two in-tile reduction strategies (implementing-stage operators):
   engine decides per matrix).
 
 Grid: one step per tile; partials (T, M) are scattered into y by the
-kernel builder (SCATTER_RED combine).
+kernel builder (SCATTER_RED combine) — unless the fused variants below
+apply.
+
+Mixed precision: vals may arrive bfloat16 and cols int16; kernels upcast
+in-register and accumulate in float32 — partials/outputs are always fp32
+(explicit ``preferred_element_type`` on every MXU contraction).
 
 Multi-RHS (SpMM) variants: x arrives as an (n_cols, B) tile, the flat
 product stream widens to (C, B), and both reductions run once for all B
@@ -25,6 +30,18 @@ columns — ``seg_scan`` cumsums along the nnz axis with B lanes and gathers
 the same segment descriptor, ``onehot_mxu`` contracts the (C, B) products
 against the (C, M) one-hot in a single MXU matmul. The format arrays
 (vals/cols/descriptor) stream once instead of B times.
+
+Fused-combine megatile variants (``*_fused``): when the format generator
+proves each tile's rowmap is a contiguous ascending run (rowmap[t, m] =
+r0[t] + m — the un-reordered sorted row stream), the whole y becomes one
+revisited output block and each grid step *accumulates* its M segment
+partials at ``pl.ds(r0[t], M)``. A row straddling a tile boundary is the
+last segment of tile t and the first of tile t+1; because the grid is
+sequential and the block stays resident, the second add lands on top of
+the first — the carry-last-segment scheme, finishing straddled rows
+in-kernel with no scatter pass. Each grid step processes
+``tiles_per_step`` tiles (megatile) to amortise the x read and the
+resident output block.
 """
 from __future__ import annotations
 
@@ -34,34 +51,51 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["seg_spmv_pallas", "seg_spmm_pallas"]
+__all__ = ["seg_spmv_pallas", "seg_spmm_pallas",
+           "seg_spmv_fused_pallas", "seg_spmm_fused_pallas"]
 
 
-def _seg_scan_kernel(x_ref, vals_ref, cols_ref, end_ref, out_ref):
-    vals = vals_ref[0].reshape(-1)          # (C,) flat nnz stream
-    cols = cols_ref[0].reshape(-1)
-    end = end_ref[0]                        # (M,) exclusive segment ends
-    x = x_ref[...]
-    prod = vals * jnp.take(x, cols, axis=0)
+def _f32(a):
+    return a.astype(jnp.float32)
+
+
+def _i32(a):
+    return a.astype(jnp.int32)
+
+
+def _seg_scan_partial(vals, cols, end, x):
+    """fp32 (M,) segment partials of one tile's flat nnz stream."""
+    prod = _f32(vals) * _f32(jnp.take(x, _i32(cols), axis=0))
     cs = jnp.cumsum(prod)                   # in-tile inclusive scan
     g = jnp.where(end > 0, jnp.take(cs, jnp.maximum(end - 1, 0)), 0.0)
     g_prev = jnp.concatenate([jnp.zeros((1,), g.dtype), g[:-1]])
-    out_ref[0, :] = g - g_prev
+    return g - g_prev
+
+
+def _onehot_partial(vals, cols, local, x, m):
+    """fp32 (M,) segment partials via the one-hot MXU contraction."""
+    prod = _f32(vals) * _f32(jnp.take(x, _i32(cols), axis=0))
+    # one-hot built from iota comparison -> (C, M); reduce on the MXU
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, m), 1)).astype(jnp.float32)
+    # dot_general accumulates in fp32; the cast keeps the store into the
+    # fp32 out_ref explicit whatever the storage dtype of vals was
+    return jax.lax.dot_general(
+        prod[None, :], onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[0].astype(jnp.float32)
+
+
+def _seg_scan_kernel(x_ref, vals_ref, cols_ref, end_ref, out_ref):
+    out_ref[0, :] = _seg_scan_partial(vals_ref[0].reshape(-1),
+                                      cols_ref[0].reshape(-1),
+                                      end_ref[0], x_ref[...])
 
 
 def _onehot_kernel(x_ref, vals_ref, cols_ref, local_ref, out_ref):
-    vals = vals_ref[0].reshape(-1)          # (C,)
-    cols = cols_ref[0].reshape(-1)
-    local = local_ref[0].reshape(-1)        # (C,) row slot per nnz
-    x = x_ref[...]
-    prod = vals * jnp.take(x, cols, axis=0)
-    m = out_ref.shape[1]
-    # one-hot built from iota comparison -> (C, M); reduce on the MXU
-    onehot = (local[:, None] == jax.lax.broadcasted_iota(
-        jnp.int32, (1, m), 1)).astype(vals.dtype)
-    out_ref[0, :] = jax.lax.dot_general(
-        prod[None, :], onehot, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)[0]
+    out_ref[0, :] = _onehot_partial(vals_ref[0].reshape(-1),
+                                    cols_ref[0].reshape(-1),
+                                    _i32(local_ref[0].reshape(-1)),
+                                    x_ref[...], out_ref.shape[1])
 
 
 @functools.partial(jax.jit, static_argnames=("seg_rows", "mode", "interpret"))
@@ -69,14 +103,14 @@ def seg_spmv_pallas(vals: jax.Array, cols: jax.Array, local_row: jax.Array,
                     seg_end: jax.Array, x: jax.Array, seg_rows: int,
                     mode: str = "seg_scan", interpret: bool = True
                     ) -> jax.Array:
-    """vals/cols/local_row: (T, S, L); seg_end: (T, M) -> partials (T, M)."""
+    """vals/cols/local_row: (T, S, L); seg_end: (T, M) -> fp32 (T, M)."""
     T, S, L = vals.shape
     M = seg_rows
     n_cols = x.shape[0]
     x_spec = pl.BlockSpec((n_cols,), lambda t: (0,))
     tile3 = pl.BlockSpec((1, S, L), lambda t: (t, 0, 0))
     out_spec = pl.BlockSpec((1, M), lambda t: (t, 0))
-    out_shape = jax.ShapeDtypeStruct((T, M), vals.dtype)
+    out_shape = jax.ShapeDtypeStruct((T, M), jnp.float32)
     if mode == "seg_scan":
         return pl.pallas_call(
             _seg_scan_kernel,
@@ -97,33 +131,39 @@ def seg_spmv_pallas(vals: jax.Array, cols: jax.Array, local_row: jax.Array,
 
 # ----------------------------- multi-RHS (SpMM) -----------------------------
 
-def _seg_scan_spmm_kernel(x_ref, vals_ref, cols_ref, end_ref, out_ref):
-    vals = vals_ref[0].reshape(-1)          # (C,)
-    cols = cols_ref[0].reshape(-1)
-    end = end_ref[0]                        # (M,)
-    x = x_ref[...]                          # (n_cols, B)
-    prod = vals[:, None] * jnp.take(x, cols, axis=0)     # (C, B)
+def _seg_scan_spmm_partial(vals, cols, end, x):
+    """fp32 (M, B) partials: scan along nnz with B lanes."""
+    prod = _f32(vals)[:, None] * _f32(jnp.take(x, _i32(cols), axis=0))
     cs = jnp.cumsum(prod, axis=0)           # scan along nnz, B lanes wide
     g = jnp.where((end > 0)[:, None],
                   jnp.take(cs, jnp.maximum(end - 1, 0), axis=0), 0.0)
     g_prev = jnp.concatenate([jnp.zeros((1,) + g.shape[1:], g.dtype),
                               g[:-1]], axis=0)
-    out_ref[0] = g - g_prev                 # (M, B)
+    return g - g_prev
+
+
+def _onehot_spmm_partial(vals, cols, local, x, m):
+    """fp32 (M, B) partials: one MXU matmul reduces all B columns."""
+    prod = _f32(vals)[:, None] * _f32(jnp.take(x, _i32(cols), axis=0))
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, m), 1)).astype(jnp.float32)       # (C, M)
+    # (M, C) x (C, B): fp32 accumulate, explicit fp32 store
+    return jax.lax.dot_general(
+        onehot, prod, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(jnp.float32)
+
+
+def _seg_scan_spmm_kernel(x_ref, vals_ref, cols_ref, end_ref, out_ref):
+    out_ref[0] = _seg_scan_spmm_partial(vals_ref[0].reshape(-1),
+                                        cols_ref[0].reshape(-1),
+                                        end_ref[0], x_ref[...])
 
 
 def _onehot_spmm_kernel(x_ref, vals_ref, cols_ref, local_ref, out_ref):
-    vals = vals_ref[0].reshape(-1)          # (C,)
-    cols = cols_ref[0].reshape(-1)
-    local = local_ref[0].reshape(-1)        # (C,)
-    x = x_ref[...]                          # (n_cols, B)
-    prod = vals[:, None] * jnp.take(x, cols, axis=0)     # (C, B)
-    m = out_ref.shape[1]
-    onehot = (local[:, None] == jax.lax.broadcasted_iota(
-        jnp.int32, (1, m), 1)).astype(vals.dtype)        # (C, M)
-    # one MXU matmul reduces all B columns at once: (M, C) x (C, B)
-    out_ref[0] = jax.lax.dot_general(
-        onehot, prod, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32).astype(vals.dtype)
+    out_ref[0] = _onehot_spmm_partial(vals_ref[0].reshape(-1),
+                                      cols_ref[0].reshape(-1),
+                                      _i32(local_ref[0].reshape(-1)),
+                                      x_ref[...], out_ref.shape[1])
 
 
 @functools.partial(jax.jit, static_argnames=("seg_rows", "mode", "interpret"))
@@ -131,14 +171,14 @@ def seg_spmm_pallas(vals: jax.Array, cols: jax.Array, local_row: jax.Array,
                     seg_end: jax.Array, x: jax.Array, seg_rows: int,
                     mode: str = "seg_scan", interpret: bool = True
                     ) -> jax.Array:
-    """vals/cols/local_row: (T, S, L); x: (n_cols, B) -> partials (T, M, B)."""
+    """vals/cols/local_row: (T, S, L); x: (n_cols, B) -> fp32 (T, M, B)."""
     T, S, L = vals.shape
     M = seg_rows
     n_cols, B = x.shape
     x_spec = pl.BlockSpec((n_cols, B), lambda t: (0, 0))
     tile3 = pl.BlockSpec((1, S, L), lambda t: (t, 0, 0))
     out_spec = pl.BlockSpec((1, M, B), lambda t: (t, 0, 0))
-    out_shape = jax.ShapeDtypeStruct((T, M, B), vals.dtype)
+    out_shape = jax.ShapeDtypeStruct((T, M, B), jnp.float32)
     if mode == "seg_scan":
         return pl.pallas_call(
             _seg_scan_spmm_kernel,
@@ -155,3 +195,157 @@ def seg_spmm_pallas(vals: jax.Array, cols: jax.Array, local_row: jax.Array,
             out_specs=out_spec, out_shape=out_shape, interpret=interpret,
         )(x, vals, cols, local_row)
     raise ValueError(f"unknown mode {mode!r}")
+
+
+# ----------------------- fused-combine megatile kernels ----------------------
+
+def _seg_fused_kernel(x_ref, vals_ref, cols_ref, aux_ref, r0_ref, y_ref,
+                      *, mode: str, seg_rows: int):
+    """Megatile step: K tiles' segment partials accumulated into resident y.
+
+    ``aux_ref`` is the segment descriptor (K, M) for seg_scan or the
+    local-row slots (K, S, L) for onehot_mxu. ``r0_ref[k]`` is the global
+    row of tile k's first segment; contiguity (rowmap[t, m] = r0 + m) was
+    proven by the format generator. The read-modify-write at
+    ``pl.ds(r0, M)`` is the carry: a row straddling tiles receives one add
+    per tile, sequentially, on the same resident block.
+    """
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        y_ref[...] = jnp.zeros(y_ref.shape, y_ref.dtype)
+
+    K = vals_ref.shape[0]
+    M = seg_rows
+    x = x_ref[...]
+    for k in range(K):
+        vals = vals_ref[k].reshape(-1)
+        cols = cols_ref[k].reshape(-1)
+        if mode == "onehot_mxu":
+            part = _onehot_partial(vals, cols, _i32(aux_ref[k].reshape(-1)),
+                                   x, M)
+        else:
+            part = _seg_scan_partial(vals, cols, aux_ref[k], x)
+        start = r0_ref[k]
+        y_ref[pl.ds(start, M)] = y_ref[pl.ds(start, M)] + part
+
+
+def _seg_spmm_fused_kernel(x_ref, vals_ref, cols_ref, aux_ref, r0_ref, y_ref,
+                           *, mode: str, seg_rows: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        y_ref[...] = jnp.zeros(y_ref.shape, y_ref.dtype)
+
+    K = vals_ref.shape[0]
+    M = seg_rows
+    x = x_ref[...]
+    for k in range(K):
+        vals = vals_ref[k].reshape(-1)
+        cols = cols_ref[k].reshape(-1)
+        if mode == "onehot_mxu":
+            part = _onehot_spmm_partial(vals, cols,
+                                        _i32(aux_ref[k].reshape(-1)), x, M)
+        else:
+            part = _seg_scan_spmm_partial(vals, cols, aux_ref[k], x)
+        start = r0_ref[k]
+        y_ref[pl.ds(start, M), :] = y_ref[pl.ds(start, M), :] + part
+
+
+def _pad_seg_tiles(arrays, K, fills):
+    """Pad the tile axis to a multiple of K. seg_end pads with 0 (so the
+    ``end > 0`` guard zeroes every padding segment), vals with 0."""
+    T = arrays[0].shape[0]
+    Tp = -(-T // K) * K
+    if Tp == T:
+        return arrays, Tp
+    out = []
+    for a, fill in zip(arrays, fills):
+        pad = ((0, Tp - T),) + ((0, 0),) * (a.ndim - 1)
+        out.append(jnp.pad(a, pad, constant_values=fill))
+    return out, Tp
+
+
+@functools.partial(jax.jit, static_argnames=("seg_rows", "n_rows", "n_out",
+                                             "mode", "tiles_per_step",
+                                             "interpret"))
+def seg_spmv_fused_pallas(vals: jax.Array, cols: jax.Array,
+                          local_row: jax.Array, seg_end: jax.Array,
+                          r0: jax.Array, x: jax.Array, seg_rows: int,
+                          n_rows: int, *, n_out: int,
+                          mode: str = "seg_scan", tiles_per_step: int = 1,
+                          interpret: bool = True) -> jax.Array:
+    """Fused-combine seg SpMV -> the finished (n_rows,) y.
+
+    ``r0``: (T,) first global row of each tile (0 for all-padding tiles);
+    ``n_out``: REQUIRED static slab size >= max(r0) + seg_rows (the
+    format generator records it in the kernel spec as ``fused_rows``) —
+    a smaller slab would clamp the last tiles' dynamic-slice writes onto
+    wrong rows, so the caller must supply the host-computed bound.
+    """
+    T, S, L = vals.shape
+    M = seg_rows
+    K = max(min(int(tiles_per_step), T), 1)
+    aux = local_row if mode == "onehot_mxu" else seg_end
+    (vals, cols, aux, r0), Tp = _pad_seg_tiles(
+        [vals, cols, aux, r0], K, [0, 0, 0, 0])
+    ny = max(int(n_rows), int(n_out))
+    n_cols = x.shape[0]
+    aux_spec = (pl.BlockSpec((K, S, L), lambda t: (t, 0, 0))
+                if mode == "onehot_mxu"
+                else pl.BlockSpec((K, M), lambda t: (t, 0)))
+    out = pl.pallas_call(
+        functools.partial(_seg_fused_kernel, mode=mode, seg_rows=M),
+        grid=(Tp // K,),
+        in_specs=[
+            pl.BlockSpec((n_cols,), lambda t: (0,)),
+            pl.BlockSpec((K, S, L), lambda t: (t, 0, 0)),
+            pl.BlockSpec((K, S, L), lambda t: (t, 0, 0)),
+            aux_spec,
+            pl.BlockSpec((K,), lambda t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((ny,), lambda t: (0,)),   # revisited block
+        out_shape=jax.ShapeDtypeStruct((ny,), jnp.float32),
+        interpret=interpret,
+    )(x, vals, cols, aux, r0)
+    return out[:n_rows]
+
+
+@functools.partial(jax.jit, static_argnames=("seg_rows", "n_rows", "n_out",
+                                             "mode", "tiles_per_step",
+                                             "interpret"))
+def seg_spmm_fused_pallas(vals: jax.Array, cols: jax.Array,
+                          local_row: jax.Array, seg_end: jax.Array,
+                          r0: jax.Array, x: jax.Array, seg_rows: int,
+                          n_rows: int, *, n_out: int,
+                          mode: str = "seg_scan", tiles_per_step: int = 1,
+                          interpret: bool = True) -> jax.Array:
+    """Fused-combine seg SpMM: x (n_cols, B) -> the finished (n_rows, B)."""
+    T, S, L = vals.shape
+    M = seg_rows
+    K = max(min(int(tiles_per_step), T), 1)
+    aux = local_row if mode == "onehot_mxu" else seg_end
+    (vals, cols, aux, r0), Tp = _pad_seg_tiles(
+        [vals, cols, aux, r0], K, [0, 0, 0, 0])
+    ny = max(int(n_rows), int(n_out))
+    n_cols, B = x.shape
+    aux_spec = (pl.BlockSpec((K, S, L), lambda t: (t, 0, 0))
+                if mode == "onehot_mxu"
+                else pl.BlockSpec((K, M), lambda t: (t, 0)))
+    out = pl.pallas_call(
+        functools.partial(_seg_spmm_fused_kernel, mode=mode, seg_rows=M),
+        grid=(Tp // K,),
+        in_specs=[
+            pl.BlockSpec((n_cols, B), lambda t: (0, 0)),
+            pl.BlockSpec((K, S, L), lambda t: (t, 0, 0)),
+            pl.BlockSpec((K, S, L), lambda t: (t, 0, 0)),
+            aux_spec,
+            pl.BlockSpec((K,), lambda t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((ny, B), lambda t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ny, B), jnp.float32),
+        interpret=interpret,
+    )(x, vals, cols, aux, r0)
+    return out[:n_rows]

@@ -269,7 +269,10 @@ def test_target_validation_and_key():
     with pytest.raises(ValueError):
         repro.Target(partition="diag")
     with pytest.raises(ValueError):
-        repro.Target(backend="pallas", dtype="bfloat16")
+        repro.Target(dtype="float16")
+    # bf16 storage + pallas is supported since the fused-combine PR
+    assert repro.Target(backend="pallas", dtype="bfloat16").dtype == \
+        "bfloat16"
     a, b = repro.Target(), repro.Target(batch_size=8)
     assert a.key() != b.key()
     assert a.key() == repro.Target().key()
