@@ -1,0 +1,177 @@
+"""Serving-plane load benchmark: offered-QPS sweep -> BENCH_serve.json.
+
+Closed loop over the SpmvEngine/PlanExecutor plane: at each offered rate,
+matvec requests arrive open-loop (deterministic uniform inter-arrivals),
+the engine drains them in bucketed steps, and we record p50/p99 request
+latency plus achieved throughput. The throughput ceiling is the max
+achieved completion rate across the sweep (offered rates past the ceiling
+saturate and queue).
+
+Mid-sweep, a freshly searched plan for the same matrix is ``put`` into
+the PlanStore under the serving key; the executor's watch hot-swaps it
+*between* steps (>=1 zero-downtime swap under load is asserted) and every
+response is checked against the dense oracle — exactness across the swap
+is a gate, not a sample.
+
+  PYTHONPATH=src python benchmarks/serve_load.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+import repro
+from repro.serve import MatvecRequest, PlanExecutor, SpmvEngine
+from repro.serve.sparse_linear import _DEFAULT_GRAPH
+
+try:                      # runnable as module (-m benchmarks.serve_load) ...
+    from .common import scaled_families, smoke_families
+except ImportError:       # ... or as a plain script from the repo root
+    from common import scaled_families, smoke_families
+
+WALL_GUARD_S = 300          # same internal guard as the other smokes
+ORACLE_RTOL = 1e-4
+
+
+def _percentile(vals, pct):
+    if not vals:
+        return None
+    s = sorted(vals)
+    return s[min(len(s) - 1, max(0, int(round(pct / 100 * (len(s) - 1)))))]
+
+
+def run_point(eng, m, dense, qps, duration_s, rng, swap_at=None,
+              swap_fn=None):
+    """One offered-QPS point: open-loop arrivals, bucketed drain.
+
+    ``swap_fn`` (if given) is invoked once when wall time passes
+    ``swap_at`` — it puts a new plan under the serving key, so the
+    engine's next step hot-swaps mid-load."""
+    n = max(1, int(qps * duration_s))
+    arrivals = [i / qps for i in range(n)]
+    xs = rng.standard_normal((n, m.n_cols)).astype(np.float32)
+    reqs = [MatvecRequest(i, xs[i]) for i in range(n)]
+    swapped = False
+    t0 = time.perf_counter()
+    i = 0
+    last_done = t0
+    while i < n or eng.queue:
+        now = time.perf_counter() - t0
+        if swap_fn is not None and not swapped and now >= swap_at:
+            swap_fn()
+            swapped = True
+        while i < n and arrivals[i] <= now:
+            reqs[i].t_submit = t0 + arrivals[i]   # latency from *arrival*
+            eng.queue.append(reqs[i])
+            i += 1
+        if eng.step():
+            last_done = time.perf_counter()
+        elif i < n:
+            time.sleep(min(1e-3, max(0.0, arrivals[i] - now)))
+    max_err = 0.0
+    for r in reqs:
+        want = dense @ r.x
+        scale = float(np.abs(want).max()) + 1e-9
+        max_err = max(max_err, float(np.abs(r.y - want).max()) / scale)
+    lats = [r.latency_s for r in reqs]
+    span = max(last_done - t0, 1e-9)
+    return {"offered_qps": qps, "n_requests": n,
+            "latency_p50_s": _percentile(lats, 50),
+            "latency_p99_s": _percentile(lats, 99),
+            "achieved_rps": n / span,
+            "oracle_max_rel_err": max_err}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny matrix, short sweep (the CI configuration)")
+    ap.add_argument("--seconds", type=float, default=None,
+                    help="duration per sweep point")
+    ap.add_argument("--out", default=None, help="output json path")
+    args = ap.parse_args(argv)
+
+    t_start = time.perf_counter()
+    if args.smoke:
+        m = smoke_families()["powerlaw"]
+        qps_sweep = (25.0, 50.0, 100.0)
+        duration = args.seconds or 2.0
+    else:
+        m = scaled_families(1024)["powerlaw"]
+        qps_sweep = (25.0, 50.0, 100.0, 200.0, 400.0)
+        duration = args.seconds or 5.0
+
+    target = repro.Target(batch_size=8)
+    dense = m.to_dense()
+    rng = np.random.default_rng(0)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        store = repro.PlanStore(tmp)
+        # plan A: the search-free heuristic design serves first
+        plan_a = repro.compile(m, target, graph=_DEFAULT_GRAPH)
+        store.put(m, target, None, None, plan_a)
+        ex = PlanExecutor(plan_a, m, watch=store.watch(m, target))
+        eng = SpmvEngine(ex)
+        ex.warmup()   # startup compiles happen before requests arrive
+
+        # the "offline search" runs ahead of the sweep (off the serving
+        # path, as in production); under load only the *publish* happens —
+        # the watch picks it up and the executor warm-swaps between steps
+        plan_b = repro.compile(m, target, budget=repro.SearchConfig(
+            max_seconds=3, max_structures=2, coarse_samples=2,
+            timing_repeats=1))
+
+        def land_better_plan():
+            store.put(m, target, None, None, plan_b)
+
+        swap_point = len(qps_sweep) // 2
+        points = []
+        for k, qps in enumerate(qps_sweep):
+            swap = (land_better_plan, duration / 2) if k == swap_point \
+                else (None, None)
+            pt = run_point(eng, m, dense, qps, duration, rng,
+                           swap_at=swap[1], swap_fn=swap[0])
+            print(f"qps={qps:6.1f}: p50={pt['latency_p50_s'] * 1e3:7.2f}ms "
+                  f"p99={pt['latency_p99_s'] * 1e3:7.2f}ms "
+                  f"achieved={pt['achieved_rps']:7.1f} rps "
+                  f"err={pt['oracle_max_rel_err']:.2e}", flush=True)
+            points.append(pt)
+
+    wall = time.perf_counter() - t_start
+    max_err = max(p["oracle_max_rel_err"] for p in points)
+    ceiling = max(p["achieved_rps"] for p in points)
+    best = min(points, key=lambda p: p["latency_p50_s"])
+    payload = {
+        "matrix": {"n_rows": m.n_rows, "n_cols": m.n_cols, "nnz": m.nnz},
+        "buckets": list(ex.buckets),
+        "points": points,
+        "latency_p50_s": best["latency_p50_s"],
+        "latency_p99_s": best["latency_p99_s"],
+        "throughput_ceiling_rps": ceiling,
+        "hot_swaps": eng.hot_swaps,
+        "requests_served": eng.completed,
+        "oracle_max_rel_err": max_err,
+        "wall_seconds": wall,
+    }
+    out = Path(args.out) if args.out else \
+        Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    out.write_text(json.dumps(payload, indent=1))
+    print(f"throughput ceiling {ceiling:.1f} rps, {eng.hot_swaps} hot-swap(s) "
+          f"under load, max oracle rel err {max_err:.2e} -> {out}")
+
+    # gates: oracle exactness across the swap, a real zero-downtime swap,
+    # and the CI wall guard
+    assert max_err < ORACLE_RTOL, f"oracle mismatch {max_err:.2e}"
+    assert eng.hot_swaps >= 1, "plan hot-swap never fired under load"
+    assert wall < WALL_GUARD_S, f"wall {wall:.0f}s exceeded {WALL_GUARD_S}s"
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

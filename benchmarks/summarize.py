@@ -18,7 +18,8 @@ SUMMARY_NAME = "BENCH_summary.json"
 # headline keys per benchmark: small scalars worth diffing at the top
 _HEADLINES = ("n_speedup_ok", "n_devices", "dedup_ok_at_4plus_shards",
               "winners", "batch", "tiles_per_step", "wall_seconds",
-              "wall_seconds_total")
+              "wall_seconds_total", "latency_p50_s", "latency_p99_s",
+              "throughput_ceiling_rps", "hot_swaps")
 
 
 def summarize(bench_dir: Path) -> dict:

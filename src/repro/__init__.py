@@ -27,6 +27,7 @@ _EXPORTS = {
     "SpmvPlan": "repro.api",
     "ShardedSpmvPlan": "repro.api",
     "PlanStore": "repro.api",
+    "PlanWatch": "repro.api",
     "load_plan": "repro.api",
     # core containers & search surface
     "SparseMatrix": "repro.core.matrices",

@@ -45,8 +45,8 @@ from repro.core.search import (ProgramCache, SearchConfig, SearchResult,
                                _graph_from_jsonable, _graph_to_jsonable,
                                run_search)
 
-__all__ = ["Target", "SpmvPlan", "ShardedSpmvPlan", "PlanStore", "compile",
-           "load_plan"]
+__all__ = ["Target", "SpmvPlan", "ShardedSpmvPlan", "PlanStore", "PlanWatch",
+           "compile", "load_plan"]
 
 # Version 2 adds bf16 storage (arrays saved as uint16 views under
 # "bf16!"-marked keys). Plans without bf16 arrays are still written as
@@ -653,6 +653,46 @@ def _stats_distance(a, b) -> float:
     return float(np.sqrt(d))
 
 
+class PlanWatch:
+    """Poll one PlanStore entry for changes (the serving hot-swap hook).
+
+    Created by :meth:`PlanStore.watch`. ``poll()`` stats the entry's file
+    and returns a freshly loaded plan iff its (mtime_ns, size) stamp
+    changed since the last observation — None otherwise. A poll is one
+    ``stat`` call, cheap enough for serving engines to issue between
+    every decode step; a half-written or corrupt entry is skipped (the
+    old plan keeps serving) and retried on the next poll.
+    """
+
+    def __init__(self, store: "PlanStore", key: str, mesh=None):
+        self.store = store
+        self.key = key
+        self.mesh = mesh
+        self._seen = self._stamp()
+
+    @property
+    def path(self) -> Path:
+        return self.store._path(self.key)
+
+    def _stamp(self):
+        try:
+            st = self.path.stat()
+            return (st.st_mtime_ns, st.st_size)
+        except OSError:
+            return None
+
+    def poll(self):
+        stamp = self._stamp()
+        if stamp is None or stamp == self._seen:
+            return None
+        try:
+            plan = load_plan(self.path, mesh=self.mesh)
+        except Exception:
+            return None   # mid-write or corrupt: retry on the next poll
+        self._seen = stamp
+        return plan
+
+
 class PlanStore:
     """A directory of saved plans keyed by (matrix, budget/graph, strategy,
     Target).
@@ -732,6 +772,17 @@ class PlanStore:
                        "gflops": getattr(plan, "search_gflops", None)}
             (self.cache_dir / f"{key}.stats.json").write_text(
                 json.dumps(sidecar))
+
+    def watch(self, matrix, target, budget=None, graph=None,
+              strategy=None) -> PlanWatch:
+        """A :class:`PlanWatch` on this (matrix, budget/graph, strategy,
+        Target) key. The watch records the entry's current stamp at
+        creation, so only *subsequent* puts (a better plan landing from
+        an offline search, a re-tune) trigger a reload — serving engines
+        poll it between steps for zero-downtime hot-swap."""
+        return PlanWatch(self, self.key(matrix, target, budget, graph,
+                                        strategy),
+                         mesh=target.mesh)
 
     def suggest(self, matrix: SparseMatrix,
                 max_distance: float = 1.0) -> Optional[OperatorGraph]:

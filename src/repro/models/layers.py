@@ -185,27 +185,38 @@ def attention_train(cfg: ArchConfig, p: dict, x: Array, positions: Array,
 
 def attention_decode(cfg: ArchConfig, p: dict, x: Array, pos: Array,
                      k_cache: Array, v_cache: Array):
-    """One-token decode. x: (B,1,D); pos: scalar int32 (current position);
+    """One-token decode. x: (B,1,D); pos: scalar int32 (all rows at the
+    same position) or (B,) int32 per-slot positions (continuous batching:
+    each batch row advances at its own cache depth);
     caches: (B, S_c, KV, hd). With a sliding window the cache is a ring
     buffer of size S_c == window. Returns (out, k_cache, v_cache)."""
     b, _, _ = x.shape
     s_c = k_cache.shape[1]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    positions = pos[:, None] if per_slot else jnp.full((b, 1), pos, jnp.int32)
     q, k_new, v_new = _qkv(cfg, p, x, positions)
     slot = pos % s_c if cfg.window else jnp.minimum(pos, s_c - 1)
-    k_cache = jax.lax.dynamic_update_slice(
-        k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(
-        v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0))
     j = jnp.arange(s_c)
+    if per_slot:
+        # per-row cache index: one-hot write at each row's own slot
+        hit = (j[None, :] == slot[:, None])[..., None, None]
+        k_cache = jnp.where(hit, k_new.astype(k_cache.dtype), k_cache)
+        v_cache = jnp.where(hit, v_new.astype(v_cache.dtype), v_cache)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0))
+    posv = jnp.broadcast_to(pos, (b,))
+    slotv = jnp.broadcast_to(slot, (b,))
     if cfg.window:
         # ring buffer: entry j holds absolute position p_j with p_j % s_c == j
-        age = (slot - j) % s_c
-        valid = age <= jnp.minimum(pos, s_c - 1)
+        age = (slotv[:, None] - j[None, :]) % s_c
+        valid = age <= jnp.minimum(posv, s_c - 1)[:, None]
     else:
-        valid = j <= pos
-    mask = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[None, None, None, :]
-    mask = jnp.broadcast_to(mask, (b, 1, 1, s_c))
+        valid = j[None, :] <= posv[:, None]
+    mask = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[:, None, None, :]
     out = _gqa_scores_softmax_v(cfg, q, k_cache.astype(x.dtype),
                                 v_cache.astype(x.dtype), mask)
     return out @ p["wo"].astype(x.dtype), k_cache, v_cache

@@ -241,8 +241,11 @@ def cache_spec(cfg: ArchConfig, batch: int, s_cache: int,
 def decode_step(cfg: ArchConfig, params: dict, token: Array, pos: Array,
                 caches: list[dict], compute_dtype=jnp.bfloat16,
                 act_dp: Optional[tuple] = None):
-    """One-token decode. token: (B, 1); pos: scalar current position
-    (prefix-inclusive); caches as from cache_spec. Returns (logits, caches).
+    """One-token decode. token: (B, 1); pos: current position
+    (prefix-inclusive) — a scalar when every row is at the same depth, or
+    a (B,) vector of per-slot positions (continuous batching: rows that
+    joined mid-flight decode at their own cache depth); caches as from
+    cache_spec. Returns (logits, caches).
     """
     specs = pattern_specs(cfg)
     h = jnp.take(params["embed"], token, axis=0).astype(compute_dtype)

@@ -1,28 +1,41 @@
-"""Batched serving engine: continuous-batching prefill + decode loop.
+"""Serving plane: scheduling engines over dispatch executors.
 
-Serves a (reduced or full) model with a fixed decode batch: incoming
-requests are prefix-filled into free cache slots, then all active slots
-decode in lock-step (the standard TPU serving shape — decode is a single
-jitted step over the whole batch). Slot bookkeeping is host-side; all
-device work is two jitted functions (prefill_one, decode_all).
+The engine/executor split (ROADMAP "production serving plane"): engines
+own *scheduling* — request queues, slot bookkeeping, ragged batch
+formation, continuous batching — and hand each formed batch to an
+executor (``serve.executor``) that owns *dispatch*. Two engines share
+the split:
 
-This is the ``serve_step`` the decode_32k / long_500k dry-run cells lower;
-here it runs for real at reduced scale (examples/serve_requests.py).
+* :class:`ServingEngine` — token serving for a (reduced or full) model:
+  a request queue feeding free cache slots, **per-slot decode positions**
+  (slots at different depths decode correctly — requests join mid-flight
+  without corrupting their neighbours), live-masked cache commits so a
+  joining request's prefill never touches another slot's state.
+* :class:`SpmvEngine` — the matvec plane: an (optionally async) request
+  loop around ``SparseLinear.from_plan``. Ragged batches of SpMV
+  requests are padded to the plan's searched bucket geometry and
+  dispatched through a :class:`~repro.serve.executor.PlanExecutor`;
+  between steps the executor polls its ``PlanStore`` watch, so a better
+  plan landing from an offline search hot-swaps with zero downtime
+  (in-flight batches finish on the old plan).
 """
 from __future__ import annotations
 
+import asyncio
 import dataclasses
 import time
+from collections import deque
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import cache_spec, decode_step, init_params
 
-__all__ = ["ServeConfig", "ServingEngine"]
+from .executor import ModelExecutor, PlanExecutor
+
+__all__ = ["ServeConfig", "Request", "ServingEngine",
+           "MatvecRequest", "SpmvEngine"]
 
 
 @dataclasses.dataclass
@@ -41,75 +54,126 @@ class Request:
     prompt: np.ndarray
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: Optional[float] = None   # set at enqueue/submit
+    t_first: Optional[float] = None    # first decoded token
+    t_done: Optional[float] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_submit is None or self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+
+def _percentile(sorted_vals: list, pct: float) -> Optional[float]:
+    if not sorted_vals:
+        return None
+    idx = min(len(sorted_vals) - 1,
+              max(0, int(round(pct / 100.0 * (len(sorted_vals) - 1)))))
+    return sorted_vals[idx]
 
 
 class ServingEngine:
+    """Continuous-batching token server: scheduling over a ModelExecutor.
+
+    Slot bookkeeping (positions, free list, queue) is host-side state
+    owned here; all device work lives in the executor. Every decode —
+    steady-state and prefill alike — runs with the full per-slot position
+    vector and a ``live`` mask, so a request that joins mid-flight
+    decodes at *its* cache depth and its prefill cannot clobber slots
+    that are further along.
+    """
+
     def __init__(self, cfg: ArchConfig, sc: ServeConfig,
-                 params: Optional[dict] = None):
+                 params: Optional[dict] = None,
+                 executor: Optional[ModelExecutor] = None):
         self.cfg = cfg
         self.sc = sc
         dtype = jnp.float32 if sc.compute_dtype == "float32" else jnp.bfloat16
         self.dtype = dtype
-        self.params = params if params is not None else init_params(
-            cfg, jax.random.PRNGKey(sc.seed))
-        # batched caches: one slot per concurrent request
-        self.caches = cache_spec(cfg, sc.max_batch, sc.max_seq, dtype=dtype)
+        self.executor = executor if executor is not None else ModelExecutor(
+            cfg, sc.max_batch, sc.max_seq, dtype=dtype, params=params,
+            seed=sc.seed)
+        self.params = self.executor.params
         self.positions = np.zeros(sc.max_batch, np.int32)
         self.free = list(range(sc.max_batch))
         self.active: dict[int, Request] = {}
-
-        cfg_ = cfg
-
-        def _decode(params, token, pos, caches):
-            return decode_step(cfg_, params, token, pos, caches,
-                               compute_dtype=dtype)
-
-        self._decode = jax.jit(_decode, donate_argnums=(3,))
+        self.queue: deque[Request] = deque()
 
     # ------------------------------------------------------------------
     def _prefill_slot(self, slot: int, prompt: np.ndarray):
-        """Sequential prefill into one slot via the decode path (slot-level
-        caches are slices of the batch caches; fine at example scale)."""
+        """Sequential prefill into one slot via the decode path. Only this
+        slot is live: neighbours' caches (attention K/V and SSM state)
+        commit nothing while the joiner catches up."""
+        live = np.zeros(self.sc.max_batch, bool)
+        live[slot] = True
+        logits = None
         for t in prompt:
             tok = np.zeros((self.sc.max_batch, 1), np.int32)
             tok[slot, 0] = t
-            logits, self.caches = self._decode(
-                self.params, jnp.asarray(tok),
-                jnp.int32(self.positions[slot]), self.caches)
+            logits = self.executor.decode(tok, self.positions, live)
             self.positions[slot] += 1
         return logits
 
+    def enqueue(self, req: Request) -> None:
+        """Queue a request; it joins mid-flight at the next step boundary."""
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
     def submit(self, req: Request) -> bool:
+        """Prefill ``req`` into a free slot now. False when no slot is
+        free; raises ``ValueError`` on an empty prompt. A prefill failure
+        rolls the slot back to the free list before propagating."""
+        prompt = np.asarray(req.prompt)
+        if prompt.size == 0:
+            raise ValueError(
+                f"request {req.rid}: empty prompt — prompts must contain "
+                "at least one token")
         if not self.free:
             return False
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
         slot = self.free.pop()
         self.positions[slot] = 0
         req._slot = slot
         self.active[slot] = req
-        self._prefill_slot(slot, req.prompt)
+        try:
+            self._prefill_slot(slot, prompt)
+        except Exception:
+            del self.active[slot]
+            self.positions[slot] = 0
+            self.free.append(slot)
+            raise
         return True
 
     def step(self) -> None:
-        """One lock-step decode over all active slots."""
+        """Admit queued joiners, then one decode over all active slots —
+        each at its own position."""
+        while self.queue and self.free:
+            self.submit(self.queue.popleft())
         if not self.active:
             return
         tok = np.zeros((self.sc.max_batch, 1), np.int32)
+        live = np.zeros(self.sc.max_batch, bool)
         for slot, req in self.active.items():
             prev = (req.out_tokens[-1] if req.out_tokens
-                    else int(req.prompt[-1]))
+                    else int(np.asarray(req.prompt)[-1]))
             tok[slot, 0] = prev
-        pos = int(max(self.positions[s] for s in self.active))
-        logits, self.caches = self._decode(self.params, jnp.asarray(tok),
-                                           jnp.int32(pos), self.caches)
-        logits = np.asarray(logits)
+            live[slot] = True
+        logits = self.executor.decode(tok, self.positions, live)
+        now = time.perf_counter()
         done_slots = []
         for slot, req in self.active.items():
             nxt = int(np.argmax(logits[slot, 0, : self.cfg.vocab]))
             req.out_tokens.append(nxt)
+            if req.t_first is None:
+                req.t_first = now
             self.positions[slot] += 1
             if (len(req.out_tokens) >= self.sc.max_new_tokens
                     or self.positions[slot] >= self.sc.max_seq - 1):
                 req.done = True
+                req.t_done = now
                 done_slots.append(slot)
         for slot in done_slots:
             del self.active[slot]
@@ -117,19 +181,127 @@ class ServingEngine:
 
     def run(self, requests: list[Request]) -> dict:
         t0 = time.perf_counter()
-        pending = list(requests)
-        done = []
+        for r in requests:
+            self.enqueue(r)
         steps = 0
-        while pending or self.active:
-            while pending and self.free:
-                self.submit(pending.pop(0))
+        while self.queue or self.active:
             self.step()
             steps += 1
-            done = [r for r in requests if r.done]
             if steps > 10_000:
                 raise RuntimeError("serving did not terminate")
         wall = time.perf_counter() - t0
         total_tokens = sum(len(r.out_tokens) for r in requests)
+        lats = sorted(r.latency_s for r in requests
+                      if r.latency_s is not None)
         return {"requests": len(requests), "tokens": total_tokens,
                 "wall_s": wall, "tok_per_s": total_tokens / max(wall, 1e-9),
-                "decode_steps": steps}
+                "decode_steps": steps,
+                "latency_p50_s": _percentile(lats, 50),
+                "latency_p99_s": _percentile(lats, 99),
+                "latency_per_request_s": lats}
+
+
+# ----------------------------- matvec plane ---------------------------------
+
+@dataclasses.dataclass
+class MatvecRequest:
+    """One SpMV request: x (n_cols,) in, y (n_rows,) out."""
+    rid: int
+    x: np.ndarray
+    y: Optional[np.ndarray] = None
+    t_submit: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_submit is None or self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+
+class SpmvEngine:
+    """Request loop around ``SparseLinear.from_plan`` (via PlanExecutor).
+
+    Scheduling: a FIFO queue drained in ragged batches — each step takes
+    up to the executor's top bucket, pads to the nearest bucket, and
+    dispatches. Hot-swap: ``step()`` polls the executor's PlanStore watch
+    *between* batches, so a swap never lands mid-batch and serving never
+    pauses (``hot_swaps`` counts them). An asyncio surface
+    (``submit_async`` + ``serve_forever``) makes it an async request
+    loop; the sync ``run`` is the closed-loop path benchmarks drive.
+    """
+
+    def __init__(self, executor: PlanExecutor):
+        self.executor = executor
+        self.queue: deque[MatvecRequest] = deque()
+        self.completed = 0
+        self.hot_swaps = 0
+        self._rid = 0
+        self._running = False
+
+    def enqueue(self, req: MatvecRequest) -> None:
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    def step(self) -> list[MatvecRequest]:
+        """One scheduling step: maybe hot-swap, then drain one bucket."""
+        if self.executor.maybe_reload():
+            self.hot_swaps += 1
+        if not self.queue:
+            return []
+        take = min(len(self.queue), self.executor.max_bucket)
+        batch = [self.queue.popleft() for _ in range(take)]
+        ys = self.executor.execute(np.stack([r.x for r in batch]))
+        now = time.perf_counter()
+        for r, y in zip(batch, ys):
+            r.y = y
+            r.t_done = now
+        self.completed += len(batch)
+        return batch
+
+    def run(self, requests: list[MatvecRequest]) -> dict:
+        """Drain a request list to completion; per-request latency stats."""
+        t0 = time.perf_counter()
+        for r in requests:
+            self.enqueue(r)
+        while self.queue:
+            self.step()
+        wall = time.perf_counter() - t0
+        lats = sorted(r.latency_s for r in requests
+                      if r.latency_s is not None)
+        return {"requests": len(requests), "wall_s": wall,
+                "throughput_rps": len(requests) / max(wall, 1e-9),
+                "hot_swaps": self.hot_swaps,
+                "latency_p50_s": _percentile(lats, 50),
+                "latency_p99_s": _percentile(lats, 99)}
+
+    # -- async surface -----------------------------------------------------
+    def submit_async(self, x: np.ndarray,
+                     rid: Optional[int] = None) -> "asyncio.Future":
+        """Enqueue from a running event loop; resolves to y."""
+        loop = asyncio.get_running_loop()
+        self._rid += 1
+        req = MatvecRequest(rid if rid is not None else self._rid,
+                            np.asarray(x))
+        req._future = loop.create_future()
+        self.enqueue(req)
+        return req._future
+
+    async def serve_forever(self, idle_sleep_s: float = 1e-3) -> None:
+        """Async request loop: drain in bucketed steps, yielding control
+        between steps so new submissions join mid-flight. Stop with
+        :meth:`shutdown`."""
+        self._running = True
+        try:
+            while self._running:
+                for r in self.step():
+                    fut = getattr(r, "_future", None)
+                    if fut is not None and not fut.done():
+                        fut.set_result(r.y)
+                await asyncio.sleep(0 if self.queue else idle_sleep_s)
+        finally:
+            self._running = False
+
+    def shutdown(self) -> None:
+        self._running = False

@@ -1,0 +1,205 @@
+"""Executors: device-side dispatch for the serving plane.
+
+Engine/executor split (ROADMAP "production serving plane"): the engine
+(``serve.engine``) owns *scheduling* — request queues, slot bookkeeping,
+continuous batching — while executors own *dispatch*: the jitted device
+work and the artifact it runs. Two executors cover the plane:
+
+* :class:`ModelExecutor` — params + batched slot caches + the jitted
+  per-slot decode step for token serving.
+* :class:`PlanExecutor` — a compiled ``SpmvPlan`` behind
+  ``SparseLinear.from_plan``, with pad-to-bucket batching derived from
+  the plan's searched tile geometry and zero-downtime hot-swap (atomic
+  plan replacement, optionally driven by a ``PlanStore`` watch).
+
+Multi-tenant serving falls out of the split: one process can hold many
+``PlanExecutor``s keyed by tenant/matrix, and plans hot-swap without
+touching any scheduling state.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import cache_spec, decode_step, init_params
+
+from .sparse_linear import SparseLinear
+
+__all__ = ["ModelExecutor", "PlanExecutor", "decode_buckets"]
+
+
+class ModelExecutor:
+    """Jitted decode dispatch over batched slot caches.
+
+    ``decode(tokens, positions, live)`` runs one decode step where every
+    batch row advances at *its own* cache position (``positions`` is a
+    (B,) vector) and only ``live`` rows commit cache writes. Masking the
+    commit at the cache-pytree level protects position-indexed attention
+    K/V *and* position-independent SSM conv/ssm state alike, which is
+    what makes mid-flight prefill of one slot safe while its neighbours
+    are mid-decode.
+    """
+
+    def __init__(self, cfg: ArchConfig, max_batch: int, max_seq: int,
+                 dtype=jnp.float32, params: Optional[dict] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.dtype = dtype
+        self.params = params if params is not None else init_params(
+            cfg, jax.random.PRNGKey(seed))
+        self.caches = cache_spec(cfg, max_batch, max_seq, dtype=dtype)
+
+        def _step(params, token, pos, live, caches):
+            logits, new = decode_step(cfg, params, token, pos, caches,
+                                      compute_dtype=dtype)
+
+            def commit(n, o):
+                # cache leaves are (n_blocks, batch, ...): batch axis 1
+                keep = live.reshape((1, -1) + (1,) * (n.ndim - 2))
+                return jnp.where(keep, n, o)
+
+            return logits, jax.tree.map(commit, new, caches)
+
+        self._step = jax.jit(_step, donate_argnums=(4,))
+
+    def decode(self, tokens: np.ndarray, positions: np.ndarray,
+               live: np.ndarray) -> np.ndarray:
+        """One per-slot decode step; returns host logits (B, 1, vocab)."""
+        logits, self.caches = self._step(
+            self.params, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(positions, jnp.int32),
+            jnp.asarray(live, bool), self.caches)
+        return np.asarray(logits)
+
+    def reset(self) -> None:
+        """Drop all cache state (every slot becomes reusable)."""
+        self.caches = cache_spec(self.cfg, self.max_batch, self.max_seq,
+                                 dtype=self.dtype)
+
+
+def decode_buckets(plan, max_bucket: Optional[int] = None) -> tuple:
+    """Pad-to-bucket sizes from the plan's searched tile geometry.
+
+    The searched ``target.batch_size`` B is the top bucket — the SpMM
+    tile width the search actually timed candidates at — with a
+    power-of-two ladder below it so small ragged batches don't pay
+    full-B padding. ``max_bucket`` widens the top when the engine wants
+    to batch past the searched width.
+    """
+    top = max(int(getattr(getattr(plan, "target", None), "batch_size", 1)
+                  or 1), 1)
+    if max_bucket is not None:
+        top = max(top, int(max_bucket))
+    buckets, b = [], 1
+    while b < top:
+        buckets.append(b)
+        b *= 2
+    buckets.append(top)
+    return tuple(buckets)
+
+
+class PlanExecutor:
+    """Compiled-plan dispatch with bucketed batching and atomic hot-swap.
+
+    Holds the current ``SpmvPlan`` behind a ``SparseLinear``; ``execute``
+    pads a ragged (n, n_cols) batch to the nearest bucket and runs the
+    plan's fused multi-RHS path. ``swap_plan`` replaces the plan with a
+    single reference assignment — in-flight batches finish on the layer
+    object they captured, the next batch sees the new plan, no step is
+    ever dropped. ``maybe_reload`` polls an attached ``PlanStore`` watch
+    (``PlanStore.watch(...)``) so better plans landing from an offline
+    search hot-swap with zero downtime.
+    """
+
+    def __init__(self, plan, matrix=None, buckets=None, watch=None):
+        self._layer = SparseLinear.from_plan(plan, matrix)
+        self.buckets = tuple(sorted(buckets)) if buckets \
+            else decode_buckets(plan)
+        self._watch = watch
+        self.swap_count = 0
+        self._lock = threading.Lock()
+
+    # -- plan access -------------------------------------------------------
+    @property
+    def layer(self) -> SparseLinear:
+        return self._layer
+
+    @property
+    def plan(self):
+        return self._layer.program
+
+    @property
+    def max_bucket(self) -> int:
+        return self.buckets[-1]
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket >= n (capped at the top bucket)."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    # -- hot-swap ----------------------------------------------------------
+    def attach_watch(self, watch) -> None:
+        self._watch = watch
+
+    def warmup(self, layer: Optional[SparseLinear] = None) -> None:
+        """Compile a layer's dispatch at every bucket size (zeros input).
+
+        Run on the incoming plan *before* the atomic swap so a hot-swap
+        never stalls serving on kernel compilation, and at startup so the
+        first real requests don't pay it either."""
+        layer = layer if layer is not None else self._layer
+        n_cols = getattr(layer.program, "n_cols", None)
+        if n_cols is None:
+            return
+        for b in self.buckets:
+            layer(jnp.zeros((b, n_cols), jnp.float32))
+
+    def swap_plan(self, plan, warm: bool = True) -> None:
+        """Atomic replacement: one reference assignment under a lock.
+        ``warm=True`` compiles the new plan's kernels first."""
+        new_layer = SparseLinear.from_plan(plan, self._layer.matrix)
+        if warm:
+            self.warmup(new_layer)
+        with self._lock:
+            self._layer = new_layer
+            self.swap_count += 1
+
+    def maybe_reload(self) -> bool:
+        """Poll the attached watch; swap and report True on a new plan."""
+        if self._watch is None:
+            return False
+        plan = self._watch.poll()
+        if plan is None:
+            return False
+        self.swap_plan(plan)
+        return True
+
+    # -- dispatch ----------------------------------------------------------
+    def execute(self, xs: np.ndarray) -> np.ndarray:
+        """xs: (n, n_cols) -> (n, n_rows), padded to bucket geometry.
+
+        Batches wider than the top bucket are chunked; each chunk runs
+        on whatever plan is current when it starts (hot-swap boundary is
+        the chunk, never mid-chunk).
+        """
+        xs = np.asarray(xs)
+        outs = []
+        for lo in range(0, xs.shape[0], self.max_bucket):
+            chunk = xs[lo:lo + self.max_bucket]
+            layer = self._layer          # capture once per chunk
+            n = chunk.shape[0]
+            b = self.bucket_for(n)
+            if n < b:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((b - n, chunk.shape[1]), chunk.dtype)])
+            outs.append(np.asarray(layer(jnp.asarray(chunk)))[:n])
+        return np.concatenate(outs) if len(outs) > 1 else outs[0]

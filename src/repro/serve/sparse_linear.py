@@ -36,11 +36,17 @@ __all__ = ["SparseLinear", "sparsify_linear", "sparsify_linear_sharded",
 
 
 def prune_magnitude(w: np.ndarray, density: float) -> SparseMatrix:
-    """Keep the top-|density| fraction of |w| entries as a SparseMatrix."""
+    """Keep exactly k = max(1, floor(size * density)) largest-|w| entries.
+
+    Ties at the magnitude threshold break deterministically toward the
+    lower row-major flat index, so the result is exactly-k nnz and
+    reproducible — a ``>= thresh`` cut would keep *every* tied entry and
+    overshoot the requested density."""
     flat = np.abs(w).ravel()
     k = max(1, int(flat.size * density))
-    thresh = np.partition(flat, -k)[-k]
-    rows, cols = np.nonzero(np.abs(w) >= thresh)
+    order = np.lexsort((np.arange(flat.size), -flat))
+    keep = np.sort(order[:k])
+    rows, cols = np.unravel_index(keep, w.shape)
     return SparseMatrix(w.shape[0], w.shape[1], rows.astype(np.int32),
                         cols.astype(np.int32),
                         w[rows, cols].astype(np.float32)).canonical()
@@ -72,8 +78,25 @@ class SparseLinear:
         return jax.vmap(lambda xi: self.program(xi))(x)
 
     @property
-    def density(self) -> float:
-        return self.matrix.nnz / (self.matrix.n_rows * self.matrix.n_cols)
+    def density(self) -> Optional[float]:
+        """nnz / (n_rows * n_cols). Prefers the wrapped matrix; a layer
+        built with ``from_plan(plan)`` (no matrix) derives it from the
+        plan's stored geometry. None — with a warning — when neither
+        carries it (e.g. an opaque program object)."""
+        if self.matrix is not None:
+            return self.matrix.nnz / (self.matrix.n_rows * self.matrix.n_cols)
+        nnz = getattr(self.program, "nnz", None)
+        n_rows = getattr(self.program, "n_rows", None)
+        n_cols = getattr(self.program, "n_cols", None)
+        if nnz is not None and n_rows and n_cols:
+            return nnz / (n_rows * n_cols)
+        import warnings
+        warnings.warn(
+            "SparseLinear.density is unknown: no matrix is attached and "
+            f"the program ({type(self.program).__name__}) does not carry "
+            "nnz/n_rows/n_cols; pass the matrix to from_plan(plan, matrix)",
+            RuntimeWarning, stacklevel=2)
+        return None
 
 
 _DEFAULT_GRAPH = OperatorGraph.chain(

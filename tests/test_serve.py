@@ -1,10 +1,18 @@
-"""Serving engine + SparseLinear integration tests."""
-import numpy as np
+"""Serving-plane tests: engine/executor scheduling, mid-flight joins,
+plan hot-swap, and SparseLinear integration."""
+import asyncio
 
+import numpy as np
+import pytest
+
+import repro
 from repro.configs import get_config
-from repro.serve import ServeConfig, ServingEngine
+from repro.serve import (MatvecRequest, PlanExecutor, ServeConfig,
+                         ServingEngine, SparseLinear, SpmvEngine,
+                         decode_buckets)
 from repro.serve.engine import Request
-from repro.serve.sparse_linear import prune_magnitude, sparsify_linear
+from repro.serve.sparse_linear import (_DEFAULT_GRAPH, prune_magnitude,
+                                       sparsify_linear)
 
 
 def test_engine_serves_all_requests():
@@ -16,6 +24,10 @@ def test_engine_serves_all_requests():
     assert out["requests"] == 5
     assert all(r.done for r in reqs)
     assert all(len(r.out_tokens) == 6 for r in reqs)
+    # per-request latency is reported (the dead `done` list is gone)
+    assert len(out["latency_per_request_s"]) == 5
+    assert out["latency_p50_s"] > 0
+    assert out["latency_p99_s"] >= out["latency_p50_s"]
 
 
 def test_engine_greedy_deterministic():
@@ -30,6 +42,72 @@ def test_engine_greedy_deterministic():
     assert outs[0] == outs[1]
 
 
+def test_mid_flight_join_matches_solo():
+    """Regression for the shared-position decode bug: a request that joins
+    mid-flight (continuous batching) must produce the same token stream —
+    and the same cache content at its slot — as when it runs alone."""
+    cfg = get_config("granite-3-2b").reduced()
+    sc = ServeConfig(max_batch=2, max_seq=64, max_new_tokens=6)
+
+    def solo(prompt):
+        eng = ServingEngine(cfg, sc)
+        r = Request(0, np.asarray(prompt))
+        eng.run([r])
+        return tuple(r.out_tokens), eng, r._slot
+
+    a_tokens, a_eng, a_slot = solo([1, 2, 3])
+    b_tokens, b_eng, b_slot = solo([7, 8, 9, 10, 11])
+
+    eng = ServingEngine(cfg, sc)
+    ra = Request(0, np.array([1, 2, 3]))
+    rb = Request(1, np.array([7, 8, 9, 10, 11]))
+    assert eng.submit(ra)
+    eng.step()
+    eng.step()
+    assert eng.submit(rb)   # joins mid-flight, 2 tokens behind
+    steps = 0
+    while eng.active or eng.queue:
+        eng.step()
+        steps += 1
+        assert steps < 100
+    assert tuple(ra.out_tokens) == a_tokens
+    assert tuple(rb.out_tokens) == b_tokens
+    # cache content at each slot is bit-identical to the solo run: the
+    # joiner decoded at its own position and never clobbered its neighbour
+    for solo_eng, solo_slot, req in ((a_eng, a_slot, ra), (b_eng, b_slot, rb)):
+        for c_solo, c_stag in zip(solo_eng.executor.caches,
+                                  eng.executor.caches):
+            for k in c_solo:
+                np.testing.assert_array_equal(
+                    np.asarray(c_solo[k][:, solo_slot]),
+                    np.asarray(c_stag[k][:, req._slot]))
+
+
+def test_empty_prompt_and_slot_leak():
+    cfg = get_config("granite-3-2b").reduced()
+    eng = ServingEngine(cfg, ServeConfig(max_batch=2, max_seq=32,
+                                         max_new_tokens=2))
+    # empty prompt is rejected up front and no slot is consumed
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(0, np.array([], np.int32)))
+    assert len(eng.free) == 2 and not eng.active
+    # a prefill failure rolls the popped slot back to the free list
+    orig = eng.executor.decode
+
+    def boom(*a, **k):
+        raise RuntimeError("prefill boom")
+
+    eng.executor.decode = boom
+    with pytest.raises(RuntimeError, match="prefill boom"):
+        eng.submit(Request(1, np.array([1, 2])))
+    assert len(eng.free) == 2 and not eng.active
+    eng.executor.decode = orig
+    # the engine still serves after both failures
+    req = Request(2, np.array([1, 2, 3]))
+    out = eng.run([req])
+    assert req.done and out["requests"] == 1
+
+
 def test_prune_magnitude_density():
     rng = np.random.default_rng(0)
     w = rng.standard_normal((64, 64))
@@ -37,6 +115,35 @@ def test_prune_magnitude_density():
     assert abs(m.nnz / (64 * 64) - 0.1) < 0.02
     # kept entries are the largest-magnitude ones
     assert np.abs(m.vals).min() >= np.quantile(np.abs(w), 0.88)
+
+
+def test_prune_magnitude_exact_k_on_ties():
+    # all-equal magnitudes: a >= threshold cut would keep everything
+    w = np.ones((16, 16), np.float32)
+    m = prune_magnitude(w, 0.25)
+    assert m.nnz == 64
+    m2 = prune_magnitude(w, 0.25)
+    np.testing.assert_array_equal(m.rows, m2.rows)
+    np.testing.assert_array_equal(m.cols, m2.cols)
+    # mixed ties at the threshold still land on exactly k
+    w = np.array([[3.0, 1.0, 1.0, 1.0],
+                  [1.0, 1.0, 1.0, 0.5]], np.float32)
+    m = prune_magnitude(w, 0.5)   # k = 4, five entries tied at 1.0
+    assert m.nnz == 4
+
+
+def test_density_from_plan():
+    rng = np.random.default_rng(3)
+    w = rng.standard_normal((48, 40)).astype(np.float32)
+    m = prune_magnitude(w, 0.1)
+    plan = repro.compile(m, repro.Target(), graph=_DEFAULT_GRAPH)
+    sl = SparseLinear.from_plan(plan)     # no matrix attached
+    want = m.nnz / (m.n_rows * m.n_cols)
+    assert sl.density == pytest.approx(want)
+    # opaque program without geometry: None with a clear warning
+    opaque = SparseLinear(None, None, object())
+    with pytest.warns(RuntimeWarning, match="density is unknown"):
+        assert opaque.density is None
 
 
 def test_sparse_linear_batched_correct():
@@ -62,3 +169,115 @@ def test_sparse_linear_with_search():
     want = sl.matrix.to_dense() @ x
     np.testing.assert_allclose(y, want, rtol=1e-3, atol=1e-4)
     assert sl.search_gflops is not None
+
+
+# ----------------------------- matvec plane ---------------------------------
+
+def _plan_and_matrix(batch_size=4, seed=5, shape=(48, 40), density=0.15):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal(shape).astype(np.float32)
+    m = prune_magnitude(w, density)
+    plan = repro.compile(m, repro.Target(batch_size=batch_size),
+                         graph=_DEFAULT_GRAPH)
+    return plan, m
+
+
+def test_decode_buckets_from_plan_geometry():
+    plan, _ = _plan_and_matrix(batch_size=8)
+    assert decode_buckets(plan) == (1, 2, 4, 8)
+    plan6, _ = _plan_and_matrix(batch_size=6)
+    assert decode_buckets(plan6) == (1, 2, 4, 6)
+    ex = PlanExecutor(plan)
+    assert ex.bucket_for(1) == 1 and ex.bucket_for(3) == 4
+    assert ex.bucket_for(100) == 8   # engine chunks past the top bucket
+
+
+def test_spmv_engine_oracle_and_ragged_batches():
+    plan, m = _plan_and_matrix(batch_size=4)
+    eng = SpmvEngine(PlanExecutor(plan, m))
+    rng = np.random.default_rng(7)
+    dense = m.to_dense()
+    reqs = [MatvecRequest(i, rng.standard_normal(m.n_cols)
+                          .astype(np.float32)) for i in range(11)]
+    out = eng.run(reqs)
+    assert out["requests"] == 11 and eng.completed == 11
+    assert out["latency_p50_s"] is not None
+    for r in reqs:
+        np.testing.assert_allclose(r.y, dense @ r.x, rtol=1e-4, atol=1e-4)
+
+
+def test_plan_hot_swap_under_load(tmp_path):
+    """Swap the plan mid-load via a PlanStore watch: outputs stay
+    oracle-exact on both sides of the swap and the swap is counted."""
+    plan_a, m = _plan_and_matrix(batch_size=4)
+    target = repro.Target(batch_size=4)
+    store = repro.PlanStore(tmp_path)
+    store.put(m, target, None, None, plan_a)
+    watch = store.watch(m, target)
+    ex = PlanExecutor(plan_a, m, watch=watch)
+    eng = SpmvEngine(ex)
+    rng = np.random.default_rng(11)
+    dense = m.to_dense()
+
+    def wave(n0, n):
+        reqs = [MatvecRequest(i, rng.standard_normal(m.n_cols)
+                              .astype(np.float32)) for i in range(n0, n0 + n)]
+        for r in reqs:
+            eng.enqueue(r)
+        while eng.queue:
+            eng.step()
+        for r in reqs:
+            np.testing.assert_allclose(r.y, dense @ r.x,
+                                       rtol=1e-4, atol=1e-4)
+
+    wave(0, 9)
+    assert eng.hot_swaps == 0
+    # a better plan lands from an "offline search" under the serving key
+    plan_b = repro.compile(m, target, budget=repro.SearchConfig(
+        max_seconds=5, max_structures=2, coarse_samples=2,
+        timing_repeats=1))
+    store.put(m, target, None, None, plan_b)
+    wave(9, 9)
+    assert eng.hot_swaps == 1 and ex.swap_count == 1
+    assert ex.plan.spec_json == plan_b.spec_json
+
+
+def test_plan_watch_poll_semantics(tmp_path):
+    plan, m = _plan_and_matrix(batch_size=2)
+    target = repro.Target(batch_size=2)
+    store = repro.PlanStore(tmp_path)
+    store.put(m, target, None, None, plan)
+    watch = store.watch(m, target)
+    assert watch.poll() is None          # stamp taken at creation
+    store.put(m, target, None, None, plan)   # rewrite -> new stamp
+    reloaded = watch.poll()
+    assert reloaded is not None and reloaded.spec_json == plan.spec_json
+    assert watch.poll() is None          # stable until the next change
+    # a watch on a not-yet-written key fires after the first put
+    target8 = repro.Target(batch_size=8)
+    early = store.watch(m, target8)
+    assert early.poll() is None
+    plan8, _ = _plan_and_matrix(batch_size=8)
+    store.put(m, target8, None, None, plan8)
+    assert early.poll() is not None
+
+
+def test_spmv_engine_async_loop():
+    plan, m = _plan_and_matrix(batch_size=4)
+    eng = SpmvEngine(PlanExecutor(plan, m))
+    rng = np.random.default_rng(13)
+    xs = [rng.standard_normal(m.n_cols).astype(np.float32)
+          for _ in range(6)]
+    dense = m.to_dense()
+
+    async def main():
+        server = asyncio.ensure_future(eng.serve_forever())
+        futs = [eng.submit_async(x) for x in xs]
+        ys = await asyncio.wait_for(asyncio.gather(*futs), timeout=60)
+        eng.shutdown()
+        await server
+        return ys
+
+    ys = asyncio.run(main())
+    for x, y in zip(xs, ys):
+        np.testing.assert_allclose(y, dense @ x, rtol=1e-4, atol=1e-4)
