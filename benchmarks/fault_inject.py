@@ -1,0 +1,316 @@
+"""Fault-injection harness: seeded failures across all three planes
+-> BENCH_faults.json.
+
+The robustness proof for the fault-tolerant compile & serve layer. Three
+phases, each injecting the failures the layer claims to survive:
+
+* **Store plane** — corrupt PlanStore entries (a truncated npz and a
+  valid-zip/wrong-checksum tamper): ``verify()`` finds both, ``repair()``
+  quarantines both, ``get`` on a corrupt key recompiles instead of
+  serving garbage.
+* **Search plane** — a ``fault_hook`` makes candidates crash, hang past
+  the per-candidate deadline, and return wrong results mid-``compile()``:
+  the search records every one as a failed EvalRecord in the taxonomy,
+  finishes inside ``deadline_s``, and still returns an oracle-exact plan.
+* **Serve plane** — under load: transient executor exceptions
+  (retry-with-backoff recovers), a simulated mid-swap kill (half-written
+  serving entry — the watch skips it, the old plan keeps serving), a
+  wrong-result plan published to the store (admission spot-check rejects
+  the swap), then a good plan (hot-swaps cleanly). Backpressure rejections
+  and deadline timeouts get explicit error responses.
+
+Gates: zero dropped requests, oracle-exact outputs for every completed
+request, bounded recovery latency, >=1 rejected and >=1 successful swap.
+
+  PYTHONPATH=src python benchmarks/fault_inject.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+import repro
+from repro.api import load_plan
+from repro.core.search import fault_hook
+from repro.ft.manager import FaultToleranceManager
+from repro.serve import MatvecRequest, PlanExecutor, SpmvEngine
+from repro.serve.sparse_linear import _DEFAULT_GRAPH
+
+try:                      # runnable as module (-m benchmarks.fault_inject) ...
+    from .common import scaled_families, smoke_families
+except ImportError:       # ... or as a plain script from the repo root
+    from common import scaled_families, smoke_families
+
+WALL_GUARD_S = 300
+ORACLE_RTOL = 1e-4
+RECOVERY_BOUND_S = 10.0
+
+
+def _tamper(path: Path) -> None:
+    """Valid-zip/wrong-checksum corruption: rewrite the npz with one
+    float array perturbed but the original (now stale) header kept, so
+    only the content checksum can catch it."""
+    z = np.load(path)
+    arrays = {k: z[k] for k in z.files if k != "__plan__"}
+    header = str(z["__plan__"])
+    akey = next(k for k in sorted(arrays)
+                if arrays[k].dtype == np.float32)
+    arrays[akey] = arrays[akey] + 1.0
+    with path.open("wb") as f:
+        np.savez(f, __plan__=np.str_(header), **arrays)
+
+
+def phase_store(m, target) -> dict:
+    """Corrupt entries are found, quarantined, and never served."""
+    with tempfile.TemporaryDirectory() as tmp:
+        store = repro.PlanStore(tmp)
+        budgets = [None, repro.SearchConfig(max_seconds=1), 2.0]
+        for b in budgets:
+            plan = repro.compile(m, target, graph=_DEFAULT_GRAPH)
+            # keyed by budget (graph=None), so the three entries are
+            # distinct files
+            store.put(m, target, b, None, plan)
+        keys = [store.key(m, target, b) for b in budgets]
+        # corruption 1: truncation (a crashed non-atomic writer would
+        # leave this; our atomic save can't, so it is injected directly)
+        p0 = store._path(keys[0])
+        p0.write_bytes(p0.read_bytes()[: p0.stat().st_size // 2])
+        # corruption 2: silent bitrot — container intact, checksum stale
+        _tamper(store._path(keys[1]))
+
+        report = store.verify()
+        corrupt_keys = {k for k, _ in report["corrupt"]}
+        assert corrupt_keys == set(keys[:2]), (
+            f"verify found {corrupt_keys}, expected {set(keys[:2])}")
+        assert keys[2] in report["ok"]
+        # a corrupt entry is a miss, not an error — get() recompiles
+        assert store.get(m, target, budgets[0]) is None
+        quarantined = store.repair()
+        assert set(quarantined) == set(keys[:2])
+        assert store.verify()["corrupt"] == []
+        qdir = Path(tmp) / "quarantine"
+        assert len(list(qdir.glob("*.plan.npz"))) == 2
+        # the healthy entry still round-trips
+        good = load_plan(store._path(keys[2]))
+        x = np.ones(m.n_cols, np.float32)
+        assert np.allclose(np.asarray(good(x)),
+                           m.spmv_dense_oracle(x), atol=1e-3)
+    return {"entries_corrupted": 2, "entries_quarantined": len(quarantined),
+            "verify_clean_after_repair": True}
+
+
+def phase_search(m, target, deadline_s: float) -> dict:
+    """Crash/hang/wrong-result candidates during compile(): every fault
+    becomes a failed EvalRecord, the search meets its deadline, and the
+    returned plan is oracle-exact."""
+    calls = {"n": 0}
+
+    def hook(graph, y):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            time.sleep(deadline_s + 30)          # hang: deadline must kill
+        if calls["n"] == 3:
+            raise RuntimeError("injected candidate crash")
+        if calls["n"] == 4:
+            return y + 1.0                        # wrong result
+        return None
+
+    budget = repro.SearchConfig(max_seconds=deadline_s, max_structures=3,
+                                coarse_samples=3, timing_repeats=1,
+                                candidate_timeout_s=min(2.0, deadline_s / 4),
+                                seed=0)
+    t0 = time.perf_counter()
+    with fault_hook(hook):
+        plan = repro.compile(m, target, budget, deadline_s=deadline_s)
+    wall = time.perf_counter() - t0
+
+    counts = dict(plan.failure_counts or ())
+    res = plan.search_result
+    assert counts.get("timeout", 0) >= 1, f"hang not recorded: {counts}"
+    assert counts.get("crash", 0) >= 1, f"crash not recorded: {counts}"
+    assert counts.get("wrong_result", 0) >= 1, \
+        f"wrong result not recorded: {counts}"
+    n_failed = res.n_failed_candidates
+    assert n_failed >= 3
+    assert len(res.failed_records) == n_failed
+    assert all(r.seconds == float("inf") for r in res.failed_records)
+    # the hang may only be killed once its per-candidate deadline expires,
+    # so allow one candidate-timeout of slack past the search deadline
+    slack = (budget.candidate_timeout_s or 0) + 5.0
+    assert wall < deadline_s + slack, \
+        f"search wall {wall:.1f}s blew deadline {deadline_s}s"
+    x = np.ones(m.n_cols, np.float32)
+    err = float(np.abs(np.asarray(plan(x))
+                       - m.spmv_dense_oracle(x)).max())
+    scale = float(np.abs(m.spmv_dense_oracle(x)).max()) + 1e-9
+    assert err / scale < 1e-3, f"compiled plan wrong under faults: {err}"
+    return {"n_failed_candidates": n_failed, "failure_counts": counts,
+            "fallback": res.fallback, "wall_s": wall,
+            "deadline_s": deadline_s}
+
+
+def phase_serve(m, target, n_requests: int) -> dict:
+    """Executor exceptions, a mid-swap kill, a rejected swap, and a clean
+    swap — all under load; zero drops and oracle-exact completions."""
+    dense = m.to_dense()
+    rng = np.random.default_rng(7)
+    with tempfile.TemporaryDirectory() as tmp:
+        store = repro.PlanStore(tmp)
+        plan_a = repro.compile(m, target, graph=_DEFAULT_GRAPH)
+        store.put(m, target, None, None, plan_a)
+        serving_path = store._path(store.key(m, target))
+        ex = PlanExecutor(plan_a, m, watch=store.watch(m, target))
+        eng = SpmvEngine(ex, max_queue=max(n_requests // 2, 8),
+                         max_retries=3, retry_backoff_s=0.01,
+                         heal_after=2, ft=FaultToleranceManager())
+        ex.warmup()
+
+        # transient executor exceptions mid-request: calls 2 and 5 raise
+        orig_execute, calls = ex.execute, {"n": 0}
+
+        def flaky_execute(xs):
+            calls["n"] += 1
+            if calls["n"] in (2, 5):
+                raise RuntimeError(f"injected executor fault "
+                                   f"#{calls['n']}")
+            return orig_execute(xs)
+
+        ex.execute = flaky_execute
+
+        xs = rng.standard_normal((n_requests, m.n_cols)).astype(np.float32)
+        reqs = [MatvecRequest(i, xs[i]) for i in range(n_requests)]
+        # two doomed requests prove timeout responses are explicit
+        doomed = [MatvecRequest(10_000 + i,
+                                rng.standard_normal(m.n_cols)
+                                .astype(np.float32),
+                                deadline_s=1e-4) for i in range(2)]
+
+        for r in doomed:                          # before the burst, so
+            eng.enqueue(r)                        # backpressure can't eat them
+        rejected = [r for r in reqs if not eng.enqueue(r)]
+        accepted = [r for r in reqs if r.status != "rejected"]
+        time.sleep(0.01)                          # let the doomed expire
+
+        plan_b = repro.compile(m, target, graph=_DEFAULT_GRAPH)
+        bad_plan = repro.compile(m, target, graph=_DEFAULT_GRAPH)
+        bad_plan.fmt = {k: (v + 1.0 if str(v.dtype) == "float32" else v)
+                        for k, v in bad_plan.fmt.items()}
+        events = {"killed": False, "bad": False, "good": False}
+        steps = 0
+        while eng.queue:
+            eng.step()
+            steps += 1
+            if steps == 1 and not events["killed"]:
+                # mid-swap kill: a writer dies halfway through a
+                # non-atomic publish; the watch must skip the torn file
+                raw = serving_path.read_bytes()
+                serving_path.write_bytes(raw[: len(raw) // 2])
+                events["killed"] = True
+            elif steps == 2 and not events["bad"]:
+                # wrong-result plan published: admission must reject it
+                store.put(m, target, None, None, bad_plan)
+                events["bad"] = True
+            elif steps == 3 and not events["good"]:
+                store.put(m, target, None, None, plan_b)
+                events["good"] = True
+            if steps > 10_000:
+                raise RuntimeError("serve drain did not terminate")
+        # any swap event still pending (tiny loads drain fast): replay
+        # the remaining publishes with a trailing request each, so every
+        # injection actually lands under serving
+        for key, action in (("bad", lambda: store.put(m, target, None,
+                                                      None, bad_plan)),
+                            ("good", lambda: store.put(m, target, None,
+                                                       None, plan_b))):
+            if not events[key]:
+                action()
+                events[key] = True
+            tail = MatvecRequest(20_000, xs[0])
+            eng.enqueue(tail)
+            accepted.append(tail)
+            while eng.queue:
+                eng.step()
+
+        ex.execute = orig_execute
+
+    ok = [r for r in accepted if r.status == "ok"]
+    max_err = 0.0
+    for r in ok:
+        want = dense @ r.x
+        scale = float(np.abs(want).max()) + 1e-9
+        max_err = max(max_err, float(np.abs(r.y - want).max()) / scale)
+    dropped = sum(r.status == "pending" for r in accepted + doomed)
+
+    assert dropped == 0, f"{dropped} accepted requests dropped"
+    assert max_err < ORACLE_RTOL, f"oracle mismatch {max_err:.2e}"
+    assert all(r.status == "timeout" and r.error for r in doomed), \
+        "expired requests lack explicit timeout responses"
+    assert all(r.error and r.retry_after_s is not None for r in rejected), \
+        "backpressure rejections lack retry-after responses"
+    assert ex.rejected_swaps >= 1, "wrong-result swap was not rejected"
+    assert eng.hot_swaps >= 1, "good plan never hot-swapped under load"
+    assert eng.recovery_latencies, "injected executor faults never retried"
+    recovery_max = max(eng.recovery_latencies)
+    assert recovery_max < RECOVERY_BOUND_S, \
+        f"recovery latency {recovery_max:.2f}s exceeds bound"
+    assert eng.failed == 0, "transient faults were not recovered by retry"
+    return {"accepted": len(accepted), "rejected": len(rejected),
+            "timed_out": eng.timed_out, "completed_ok": len(ok),
+            "requests_dropped": dropped, "oracle_max_rel_err": max_err,
+            "recovery_latency_max_s": recovery_max,
+            "rejected_swaps": ex.rejected_swaps,
+            "hot_swaps": eng.hot_swaps, "health": eng.health}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny matrix, short deadlines (the CI config)")
+    ap.add_argument("--out", default=None, help="output json path")
+    args = ap.parse_args(argv)
+
+    t_start = time.perf_counter()
+    if args.smoke:
+        m = smoke_families()["powerlaw"]
+        deadline_s, n_requests = 30.0, 64
+    else:
+        m = scaled_families(1024)["powerlaw"]
+        deadline_s, n_requests = 60.0, 256
+    target = repro.Target(batch_size=8)
+
+    store_stats = phase_store(m, target)
+    print(f"store:  {store_stats}", flush=True)
+    search_stats = phase_search(m, target, deadline_s)
+    print(f"search: {search_stats}", flush=True)
+    serve_stats = phase_serve(m, target, n_requests)
+    print(f"serve:  {serve_stats}", flush=True)
+
+    wall = time.perf_counter() - t_start
+    payload = {
+        "matrix": {"n_rows": m.n_rows, "n_cols": m.n_cols, "nnz": m.nnz},
+        "store": store_stats, "search": search_stats, "serve": serve_stats,
+        # headline keys (summarize.py lifts these)
+        "store_entries_quarantined": store_stats["entries_quarantined"],
+        "n_failed_candidates": search_stats["n_failed_candidates"],
+        "requests_dropped": serve_stats["requests_dropped"],
+        "recovery_latency_max_s": serve_stats["recovery_latency_max_s"],
+        "rejected_swaps": serve_stats["rejected_swaps"],
+        "hot_swaps": serve_stats["hot_swaps"],
+        "wall_seconds": wall,
+    }
+    out = Path(args.out) if args.out else \
+        Path(__file__).resolve().parent.parent / "BENCH_faults.json"
+    out.write_text(json.dumps(payload, indent=1))
+    print(f"all fault gates passed in {wall:.1f}s -> {out}")
+    assert wall < WALL_GUARD_S, f"wall {wall:.0f}s exceeded {WALL_GUARD_S}s"
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

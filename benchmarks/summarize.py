@@ -19,7 +19,10 @@ SUMMARY_NAME = "BENCH_summary.json"
 _HEADLINES = ("n_speedup_ok", "n_devices", "dedup_ok_at_4plus_shards",
               "winners", "batch", "tiles_per_step", "wall_seconds",
               "wall_seconds_total", "latency_p50_s", "latency_p99_s",
-              "throughput_ceiling_rps", "hot_swaps")
+              "throughput_ceiling_rps", "hot_swaps",
+              "requests_dropped", "recovery_latency_max_s",
+              "rejected_swaps", "n_failed_candidates",
+              "store_entries_quarantined")
 
 
 def summarize(bench_dir: Path) -> dict:

@@ -26,6 +26,7 @@ _EXPORTS = {
     "Target": "repro.api",
     "SpmvPlan": "repro.api",
     "ShardedSpmvPlan": "repro.api",
+    "PlanIntegrityError": "repro.api",
     "PlanStore": "repro.api",
     "PlanWatch": "repro.api",
     "load_plan": "repro.api",

@@ -31,6 +31,9 @@ import functools
 import hashlib
 import json
 import math
+import os
+import tempfile
+import warnings
 from pathlib import Path
 from typing import Optional, Union
 
@@ -46,13 +49,85 @@ from repro.core.search import (ProgramCache, SearchConfig, SearchResult,
                                run_search)
 
 __all__ = ["Target", "SpmvPlan", "ShardedSpmvPlan", "PlanStore", "PlanWatch",
-           "compile", "load_plan"]
+           "PlanIntegrityError", "compile", "load_plan"]
 
 # Version 2 adds bf16 storage (arrays saved as uint16 views under
 # "bf16!"-marked keys). Plans without bf16 arrays are still written as
 # version 1, so older readers keep loading everything they can actually
 # restore and get the clean "format too new" error otherwise.
 PLAN_FORMAT_VERSION = 2
+
+
+class PlanIntegrityError(ValueError):
+    """A saved plan's content checksum does not match its arrays.
+
+    Distinct from a truncated file (which fails inside ``np.load``): the
+    zip container is intact but the payload differs from what ``save``
+    wrote — silent disk corruption, a partial copy, or tampering.
+    ``PlanStore.get`` treats it like any other unusable entry (recompile);
+    ``PlanStore.verify``/``repair`` surface and quarantine it."""
+
+
+def _content_checksum(header: dict, arrays: dict) -> str:
+    """sha256 over the header (checksum field excluded) and every array's
+    (key, dtype, shape, bytes), in sorted key order."""
+    h = hashlib.sha256()
+    h.update(json.dumps({k: v for k, v in header.items()
+                         if k != "checksum"}, sort_keys=True).encode())
+    for k in sorted(arrays):
+        a = np.ascontiguousarray(arrays[k])
+        h.update(k.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def _atomic_savez(path, header: dict, arrays: dict) -> None:
+    """Crash-safe plan write: checksum the content, write to a tempfile in
+    the destination directory, fsync, then ``os.replace`` — readers (and
+    ``PlanStore.watch`` pollers) only ever observe the old file or the
+    complete new one, never a half-written npz.
+
+    ``np.savez`` is handed an open file object (not a path) because the
+    path form appends ".npz" when the suffix is missing, which would break
+    the atomic rename."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    header = dict(header)
+    header["checksum"] = _content_checksum(header, arrays)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __plan__=np.str_(json.dumps(header)), **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def _atomic_write_text(path, text: str) -> None:
+    path = Path(path)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 # --------------------------------- Target ----------------------------------
@@ -173,6 +248,10 @@ class SpmvPlan:
     graph_json: Optional[str]       # winning OperatorGraph, if any
     target: Target
     search_gflops: Optional[float] = None
+    # failure-reason counts from the search that produced this plan, as a
+    # sorted tuple of (taxonomy bucket, count) pairs — serialized, so a
+    # plan born from a crash-riddled search stays visible after the fact
+    failure_counts: Optional[tuple] = None
     # ephemeral: the full SearchResult when this plan came from a live
     # search in this process (not serialized, not part of the pytree)
     search_result: Optional[SearchResult] = dataclasses.field(
@@ -228,6 +307,9 @@ class SpmvPlan:
                  f"  graph: {g.label() if g else '(heuristic)'}"]
         if self.search_gflops is not None:
             lines.append(f"  searched: {self.search_gflops:.3f} GFLOPS")
+        if self.failure_counts:
+            buckets = ", ".join(f"{k}={v}" for k, v in self.failure_counts)
+            lines.append(f"  search failures: {buckets}")
         for s in spec["steps"]:
             lines.append(f"  step {s['key']}: {s['report']}")
         return "\n".join(lines)
@@ -251,8 +333,11 @@ class SpmvPlan:
                   "spec": self.spec, "graph": (None if self.graph_json is None
                                                else json.loads(self.graph_json)),
                   "target": self.target.spec_dict(),
-                  "search_gflops": self.search_gflops}
-        np.savez(path, __plan__=np.str_(json.dumps(header)), **arrays)
+                  "search_gflops": self.search_gflops,
+                  "failure_counts": (None if self.failure_counts is None
+                                     else [list(p)
+                                           for p in self.failure_counts])}
+        _atomic_savez(path, header, arrays)
 
     @staticmethod
     def load(path, mesh=None) -> "SpmvPlan | ShardedSpmvPlan":
@@ -269,15 +354,15 @@ def _tree_flatten_plan(plan: SpmvPlan):
     keys = tuple(sorted(plan.fmt))
     leaves = tuple(plan.fmt[k] for k in keys)
     aux = (keys, plan.spec_json, plan.graph_json, plan.target,
-           plan.search_gflops)
+           plan.search_gflops, plan.failure_counts)
     return leaves, aux
 
 
 def _tree_unflatten_plan(aux, leaves) -> SpmvPlan:
-    keys, spec_json, graph_json, target, gflops = aux
+    keys, spec_json, graph_json, target, gflops, failure_counts = aux
     return SpmvPlan(fmt=dict(zip(keys, leaves)), spec_json=spec_json,
                     graph_json=graph_json, target=target,
-                    search_gflops=gflops)
+                    search_gflops=gflops, failure_counts=failure_counts)
 
 
 jax.tree_util.register_pytree_node(SpmvPlan, _tree_flatten_plan,
@@ -402,7 +487,7 @@ class ShardedSpmvPlan:
                   "bounds": [list(b) for b in self.bounds],
                   "replicated_bytes": self.replicated_bytes,
                   "target": self.target.spec_dict()}
-        np.savez(path, __plan__=np.str_(json.dumps(header)), **arrays)
+        _atomic_savez(path, header, arrays)
 
     load = staticmethod(SpmvPlan.load)
 
@@ -439,14 +524,26 @@ def load_plan(path, mesh=None) -> Union[SpmvPlan, ShardedSpmvPlan]:
             raise ValueError(f"plan {path} has format_version "
                              f"{header['format_version']} > supported "
                              f"{PLAN_FORMAT_VERSION}")
+        want = header.get("checksum")
+        if want is not None:
+            arrays = {k: z[k] for k in z.files if k != "__plan__"}
+            got = _content_checksum(header, arrays)
+            if got != want:
+                raise PlanIntegrityError(
+                    f"plan {path} failed its content checksum "
+                    f"(stored {want[:12]}…, computed {got[:12]}…): the "
+                    "file is corrupt or was modified after save")
         if header["kind"] == "dense":
             fmt = _npz_restore("fmt", z)
+            fc = header.get("failure_counts")
             return SpmvPlan(
                 fmt=fmt, spec_json=json.dumps(header["spec"]),
                 graph_json=(None if header["graph"] is None
                             else json.dumps(header["graph"])),
                 target=_target_from_dict(header["target"]),
-                search_gflops=header.get("search_gflops"))
+                search_gflops=header.get("search_gflops"),
+                failure_counts=(None if fc is None
+                                else tuple((k, int(v)) for k, v in fc)))
         target = _target_from_dict(header["target"], mesh=mesh)
         stacks = _npz_restore("stack", z)
         if mesh is not None:
@@ -504,17 +601,22 @@ def _plan_from_program(prog, graph: Optional[OperatorGraph],
                        target: Target, search_result=None) -> SpmvPlan:
     graph_json = (None if graph is None
                   else json.dumps(_graph_to_jsonable(graph)))
+    failure_counts = None
+    if search_result is not None and getattr(search_result,
+                                             "failure_counts", None):
+        failure_counts = tuple(sorted(search_result.failure_counts.items()))
     plan = SpmvPlan(fmt=dict(prog.fmt), spec_json=json.dumps(prog.spec),
                     graph_json=graph_json, target=target,
                     search_gflops=(search_result.gflops
                                    if search_result else None),
+                    failure_counts=failure_counts,
                     search_result=search_result)
     return plan
 
 
 def compile(matrix: SparseMatrix, target: Optional[Target] = None,
             budget=None, *, graph: Optional[OperatorGraph] = None,
-            strategy=None, warm_start=None,
+            strategy=None, warm_start=None, deadline_s: Optional[float] = None,
             cache: Optional[ProgramCache] = None,
             store: Optional["PlanStore"] = None
             ) -> Union[SpmvPlan, ShardedSpmvPlan]:
@@ -538,6 +640,13 @@ def compile(matrix: SparseMatrix, target: Optional[Target] = None,
       ignore it). With a ``store`` given and no explicit warm start,
       ``store.suggest(matrix)`` (statistics-keyed nearest stored plan)
       seeds the search automatically.
+    * ``deadline_s`` — hard wall-clock budget for the whole compile
+      (dense searched targets). The search's ``max_seconds`` is clamped
+      to it, the seed pass loses its 2x extension, and every candidate
+      runs under a per-candidate deadline derived from the time left —
+      ``compile`` always returns the best plan found so far (at worst
+      the baseline jax-backend source-format program, never an error,
+      as long as the matrix itself is designable).
     * ``cache`` — a ``ProgramCache`` memoising raw search results (keyed
       by matrix, budget AND strategy).
     * ``store`` — a :class:`PlanStore`; a prior plan for the same
@@ -570,6 +679,13 @@ def compile(matrix: SparseMatrix, target: Optional[Target] = None,
             plan = _plan_from_program(prog, graph, target)
         else:
             cfg = _as_search_config(budget, target)
+            if deadline_s is not None:
+                # the whole search — seed pass included — must fit inside
+                # the caller's wall-clock budget; candidates inherit a
+                # per-candidate deadline from the time remaining
+                cfg = dataclasses.replace(
+                    cfg, max_seconds=min(cfg.max_seconds, float(deadline_s)),
+                    hard_deadline=True)
             res = run_search(matrix, cfg, cache=cache, strategy=strategy,
                              warm_start=warm_start)
             plan = _plan_from_program(res.best_program, res.best_graph,
@@ -751,8 +867,9 @@ class PlanStore:
             return None
         try:
             plan = load_plan(path, mesh=target.mesh)
-        except Exception as e:  # truncated/corrupt npz: recompile, like
-            import warnings     # ProgramCache, instead of failing forever
+        except Exception as e:  # truncated/corrupt npz or checksum
+            # mismatch (PlanIntegrityError): recompile, like ProgramCache,
+            # instead of failing forever
             warnings.warn(f"plan store entry {path} unusable ({e!r}); "
                           "recompiling", RuntimeWarning)
             self.misses += 1
@@ -770,8 +887,48 @@ class PlanStore:
             sidecar = {"stats": _matrix_stats(matrix),
                        "graph": json.loads(graph_json),
                        "gflops": getattr(plan, "search_gflops", None)}
-            (self.cache_dir / f"{key}.stats.json").write_text(
-                json.dumps(sidecar))
+            _atomic_write_text(self.cache_dir / f"{key}.stats.json",
+                               json.dumps(sidecar))
+
+    def verify(self) -> dict:
+        """Integrity sweep over every stored entry.
+
+        Loads each ``*.plan.npz`` (no mesh attached — sharded geometry
+        checks are deferred to serving) and returns
+        ``{"ok": [keys], "corrupt": [(key, reason)]}``. Truncated files,
+        bad zip containers and checksum mismatches all land in
+        ``corrupt``; nothing is modified — use :meth:`repair` to
+        quarantine them."""
+        ok, corrupt = [], []
+        if self.cache_dir.is_dir():
+            for path in sorted(self.cache_dir.glob("*.plan.npz")):
+                key = path.name[:-len(".plan.npz")]
+                try:
+                    load_plan(path)
+                except Exception as e:
+                    corrupt.append((key, repr(e)))
+                else:
+                    ok.append(key)
+        return {"ok": ok, "corrupt": corrupt}
+
+    def repair(self) -> list[str]:
+        """Quarantine every corrupt entry found by :meth:`verify`.
+
+        Corrupt ``*.plan.npz`` files (and their ``.stats.json`` sidecars,
+        so ``suggest`` stops reading them) are moved into a
+        ``quarantine/`` subdirectory — kept for post-mortem, never served
+        again; the next ``get`` for that key recompiles. Returns the
+        quarantined keys."""
+        quarantined = []
+        qdir = self.cache_dir / "quarantine"
+        for key, _reason in self.verify()["corrupt"]:
+            qdir.mkdir(parents=True, exist_ok=True)
+            for suffix in (".plan.npz", ".stats.json"):
+                src = self.cache_dir / f"{key}{suffix}"
+                if src.exists():
+                    os.replace(src, qdir / src.name)
+            quarantined.append(key)
+        return quarantined
 
     def watch(self, matrix, target, budget=None, graph=None,
               strategy=None) -> PlanWatch:

@@ -21,14 +21,17 @@ a generated program that is fast but wrong is a bug, not a candidate
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import json
 import math
+import signal
+import threading
 import time
 import warnings
 from pathlib import Path
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -43,11 +46,99 @@ from .kernel_builder import SpmvProgram, build_program
 from .matrices import SparseMatrix
 
 __all__ = ["SearchConfig", "SearchResult", "AlphaSparseSearch", "search",
-           "run_search", "ProgramCache", "Structure", "DesignSpace"]
+           "run_search", "ProgramCache", "Structure", "DesignSpace",
+           "CandidateTimeout", "FAILURE_BUCKETS", "fault_hook"]
 
 
 # compat alias: the structure enumerator moved to repro.design.space
 _structure_space = structure_space
+
+
+# --------------------------- failure taxonomy ------------------------------
+
+# Machine-designed candidates can fail in ways no human-vetted format
+# would; the search treats each as a data point. Buckets:
+#   invalid      — GraphError/ValueError from validation or the Designer
+#                  (an inapplicable design; routine, cheap, not warned)
+#   wrong_result — the generated program ran but disagreed with the
+#                  float64 dense oracle
+#   crash        — unexpected exception while lowering or running (XLA /
+#                  Pallas lowering errors, interpreter crashes, ...)
+#   oom          — MemoryError or an XLA RESOURCE_EXHAUSTED
+#   timeout      — the candidate exceeded SearchConfig.candidate_timeout_s
+#   fallback     — marker bucket: every candidate failed and the baseline
+#                  jax-backend program was substituted
+FAILURE_BUCKETS = ("invalid", "wrong_result", "crash", "oom", "timeout",
+                   "fallback")
+
+# "hard" failures count toward structure quarantine (DesignSpace): a
+# structure that keeps crashing/hanging stops being proposed. "invalid"
+# does not — inapplicable designs are normal pruning residue.
+_HARD_FAILURES = frozenset({"wrong_result", "crash", "oom", "timeout"})
+
+
+class CandidateTimeout(RuntimeError):
+    """A candidate exceeded its per-candidate wall-clock deadline."""
+
+
+# Test/benchmark seam: a callable ``hook(graph, y) -> y`` applied to every
+# machine-designed candidate's output inside the guarded evaluation region.
+# It may raise (injected crash/OOM), sleep (injected hang — bounded by the
+# candidate deadline) or return a corrupted y (injected wrong result). The
+# baseline fallback program deliberately bypasses it.
+_FAULT_HOOK: Optional[Callable] = None
+
+
+@contextlib.contextmanager
+def fault_hook(hook: Optional[Callable]):
+    """Install a candidate fault-injection hook for the enclosed block
+    (``benchmarks/fault_inject.py`` and the fault tests use this)."""
+    global _FAULT_HOOK
+    prev = _FAULT_HOOK
+    _FAULT_HOOK = hook
+    try:
+        yield
+    finally:
+        _FAULT_HOOK = prev
+
+
+@contextlib.contextmanager
+def _candidate_deadline(seconds: Optional[float]):
+    """SIGALRM-based per-candidate wall-clock guard.
+
+    Interpret-mode Pallas executes through the Python interpreter, so a
+    hung candidate is interruptible by a signal; a candidate stuck inside
+    a long C call is only interrupted when control returns to Python.
+    No-op (yields False) when no deadline is set, off the main thread, or
+    on platforms without SIGALRM."""
+    if (not seconds or seconds <= 0 or not hasattr(signal, "SIGALRM")
+            or threading.current_thread() is not threading.main_thread()):
+        yield False
+        return
+
+    def _expire(signum, frame):
+        raise CandidateTimeout(
+            f"candidate exceeded its {seconds:g}s wall-clock deadline")
+
+    prev_handler = signal.signal(signal.SIGALRM, _expire)
+    signal.setitimer(signal.ITIMER_REAL, float(seconds))
+    try:
+        yield True
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, prev_handler)
+
+
+def _classify_failure(exc: BaseException) -> str:
+    if isinstance(exc, CandidateTimeout):
+        return "timeout"
+    if isinstance(exc, MemoryError):
+        return "oom"
+    if isinstance(exc, (GraphError, ValueError)):
+        return "invalid"
+    if "RESOURCE_EXHAUSTED" in repr(exc):
+        return "oom"
+    return "crash"
 
 
 # ----------------------------- configuration ------------------------------
@@ -83,14 +174,27 @@ class SearchConfig:
     # — always wins, so users can pin a knob off.
     tiles_per_step_choices: Optional[tuple] = None
     dtype_choices: Optional[tuple] = None
+    # -- robustness knobs (fault-tolerant compile) --
+    # wall-clock deadline per candidate: a hanging interpret-mode Pallas
+    # candidate is killed (SIGALRM, main thread only) and recorded as a
+    # failed EvalRecord instead of wedging the whole search. None = off.
+    candidate_timeout_s: Optional[float] = None
+    # hard failures (crash/oom/timeout/wrong_result) from the same
+    # structure before it is quarantined and no longer proposed
+    quarantine_after: int = 2
+    # True removes the 2x seed-pass deadline extension so the whole search
+    # (seed pass included) fits inside max_seconds — set by
+    # ``repro.compile(..., deadline_s=...)``
+    hard_deadline: bool = False
 
 
 @dataclasses.dataclass
 class EvalRecord:
     graph: OperatorGraph
-    seconds: float
-    features: np.ndarray
+    seconds: float                        # math.inf for failed candidates
+    features: Optional[np.ndarray]        # None for failed candidates
     structure: str
+    status: str = "ok"                    # "ok" or a FAILURE_BUCKETS entry
 
 
 @dataclasses.dataclass
@@ -107,6 +211,21 @@ class SearchResult:
     pruned_ops: tuple[str, ...]
     cached: bool = False          # True when served from a ProgramCache
     strategy_name: str = "anneal"  # which SearchStrategy produced this
+    # -- failure accounting (robustness layer) --
+    # failed candidates as EvalRecords (seconds=inf, status=bucket);
+    # ``records`` stays successful-only, as before
+    failed_records: list = dataclasses.field(default_factory=list)
+    # taxonomy bucket -> count (see FAILURE_BUCKETS); empty for cached hits
+    failure_counts: dict = dataclasses.field(default_factory=dict)
+    n_quarantined: int = 0        # proposals skipped via structure quarantine
+    # True when every machine-designed candidate failed and the baseline
+    # jax-backend seed program was substituted as best
+    fallback: bool = False
+
+    @property
+    def n_failed_candidates(self) -> int:
+        return sum(v for k, v in self.failure_counts.items()
+                   if k != "fallback")
 
     def is_machine_designed(self) -> bool:
         """Paper §VII-G 'creativity': graph not matching any single source
@@ -143,10 +262,17 @@ class AlphaSparseSearch:
             self._oracle = matrix.spmv_dense_oracle(self._x)
         self._memo: dict[OperatorGraph, float] = {}
         self.records: list[EvalRecord] = []
+        self.failed_records: list[EvalRecord] = []
+        self.failure_counts: dict[str, int] = {}
+        self.n_quarantined = 0
         self._best: tuple[float, OperatorGraph, SpmvProgram] = (
             math.inf, None, None)
         self.pruned_ops: tuple[str, ...] = ()
         self._design_space: Optional[DesignSpace] = None
+        # wall-clock instant the whole search must finish by; set by run()
+        # under cfg.hard_deadline so per-candidate deadlines shrink with
+        # the time remaining (compile(deadline_s=...) guarantee)
+        self._deadline_at: Optional[float] = None
 
     def _space(self) -> DesignSpace:
         if self._design_space is None:
@@ -159,41 +285,83 @@ class AlphaSparseSearch:
         space = self._space()
         return space._convs, space._chains
 
+    # -- failure bookkeeping ----------------------------------------------
+    def _fail(self, graph: OperatorGraph, label: str, bucket: str,
+              exc: Optional[BaseException] = None) -> float:
+        """Record a failed candidate: memoise inf, bucket it in the
+        taxonomy, append a failed EvalRecord, and feed structure
+        quarantine for hard failures."""
+        self._memo[graph] = math.inf
+        self.failure_counts[bucket] = self.failure_counts.get(bucket, 0) + 1
+        self.failed_records.append(
+            EvalRecord(graph, math.inf, None, label, status=bucket))
+        if bucket in _HARD_FAILURES:
+            # hard failures are surfaced (they indicate generator bugs or
+            # fragile lowerings, not routine inapplicability) ...
+            warnings.warn(
+                f"candidate {label or graph.label()} failed "
+                f"[{bucket.upper()}]"
+                f"{'' if exc is None else f': {exc!r}'}; recorded as "
+                "failed candidate", RuntimeWarning)
+            # ... and count toward quarantining their structure so repeat
+            # offenders stop being proposed
+            self._space().note_failure(
+                label, bucket, threshold=max(self.cfg.quarantine_after, 1))
+        return math.inf
+
     # -- level 2 evaluation: run the generated program --
     def _evaluate(self, graph: OperatorGraph,
                   structure_label: str) -> float:
         if graph in self._memo:
             return self._memo[graph]
+        timeout = self.cfg.candidate_timeout_s
+        if self._deadline_at is not None:
+            # hard search deadline: no candidate may run past it, so a
+            # hang near the end cannot push the search over budget
+            remaining = self._deadline_at - time.perf_counter()
+            timeout = min(timeout if timeout is not None else math.inf,
+                          max(remaining, 0.05))
         try:
-            graph.validate()
-            meta = run_graph(self.m, graph)
-            prog = build_program(meta, backend=self.cfg.backend)
-            y = np.asarray(prog(self._x))
-            if self.cfg.check_correctness:
-                scale = np.abs(self._oracle).max() + 1e-30
-                # bf16-stored candidates carry ~2^-8 relative storage
-                # rounding (accumulation is still fp32); hold them to the
-                # bf16 tolerance, not the fp32 one
-                tol = (2e-2 if prog.spec.get("storage_dtype") == "bfloat16"
-                       else 1e-3)
-                if not np.all(np.abs(y - self._oracle) <= tol * scale + 1e-5):
-                    # a wrong program is a failed candidate, not a fatal
-                    # error: memoise inf so the search moves on (the bug is
-                    # still surfaced to the caller as a warning)
-                    warnings.warn(
-                        f"generated program WRONG for {graph.label()}; "
-                        "recorded as failed candidate", RuntimeWarning)
-                    self._memo[graph] = math.inf
-                    return math.inf
-            # timing: min over repeats of a blocking call
-            best = math.inf
-            for _ in range(self.cfg.timing_repeats):
-                t0 = time.perf_counter()
-                prog(self._x).block_until_ready()
-                best = min(best, time.perf_counter() - t0)
+            with _candidate_deadline(timeout):
+                graph.validate()
+                meta = run_graph(self.m, graph)
+                prog = build_program(meta, backend=self.cfg.backend)
+                y = np.asarray(prog(self._x))
+                if _FAULT_HOOK is not None:
+                    hooked = _FAULT_HOOK(graph, y)
+                    if hooked is not None:
+                        y = np.asarray(hooked)
+                if self.cfg.check_correctness:
+                    scale = np.abs(self._oracle).max() + 1e-30
+                    # bf16-stored candidates carry ~2^-8 relative storage
+                    # rounding (accumulation is still fp32); hold them to
+                    # the bf16 tolerance, not the fp32 one
+                    tol = (2e-2
+                           if prog.spec.get("storage_dtype") == "bfloat16"
+                           else 1e-3)
+                    if not np.all(np.abs(y - self._oracle)
+                                  <= tol * scale + 1e-5):
+                        # a wrong program is a failed candidate, not a
+                        # fatal error: the search moves on
+                        return self._fail(graph, structure_label,
+                                          "wrong_result")
+                # timing: min over repeats of a blocking call
+                best = math.inf
+                for _ in range(self.cfg.timing_repeats):
+                    t0 = time.perf_counter()
+                    prog(self._x).block_until_ready()
+                    best = min(best, time.perf_counter() - t0)
         except (GraphError, ValueError) as e:
-            self._memo[graph] = math.inf
-            return math.inf
+            # routine inapplicability (validation/Designer rejection)
+            return self._fail(graph, structure_label, "invalid", e)
+        except KeyboardInterrupt:
+            raise
+        except BaseException as e:
+            # everything else — XLA/Pallas lowering errors, MemoryError,
+            # interpreter crashes, the candidate deadline — is a failed
+            # candidate, never a fatal search error
+            return self._fail(graph, structure_label, _classify_failure(e),
+                              e)
         self._memo[graph] = best
         self.records.append(EvalRecord(graph, best,
                                        program_features(
@@ -204,14 +372,47 @@ class AlphaSparseSearch:
             self._best = (best, graph, prog)
         return best
 
+    # -- baseline fallback: the trusted CSR-style jax program --------------
+    def _baseline_program(self):
+        """Build and time the baseline source-format program (jax backend,
+        no fault hook, no machine-designed risk). Used when every searched
+        candidate failed: ``compile()`` must still return a working plan.
+        """
+        space = self._space()
+        last_err = None
+        for structure in space.seed_structures():
+            for graph in space.bind(structure, "coarse")[:3]:
+                try:
+                    meta = run_graph(self.m, graph)
+                    prog = build_program(meta, backend="jax")
+                    y = np.asarray(prog(self._x))
+                    if self.cfg.check_correctness:
+                        scale = np.abs(self._oracle).max() + 1e-30
+                        if not np.all(np.abs(y - self._oracle)
+                                      <= 1e-3 * scale + 1e-5):
+                            continue
+                    t0 = time.perf_counter()
+                    np.asarray(prog(self._x))
+                    return graph, prog, time.perf_counter() - t0
+                except (GraphError, ValueError, RuntimeError) as e:
+                    last_err = e
+        raise RuntimeError(
+            "search found no valid program and the baseline fallback "
+            f"failed too (last error: {last_err!r})")
+
     # -- the driver loop over the SearchStrategy protocol --
     def run(self, strategy=None, warm_start=()) -> SearchResult:
         strategy = make_strategy(strategy)
         t_start = time.perf_counter()
         deadline = t_start + self.cfg.max_seconds
         # seed-pass candidates are the fidelity floor (the search must never
-        # lose to its own source formats): they run under an extended wall
-        seed_deadline = t_start + 2.0 * self.cfg.max_seconds
+        # lose to its own source formats): they run under an extended wall —
+        # unless a hard deadline was requested (compile(deadline_s=...)),
+        # where the whole search must fit inside max_seconds
+        seed_factor = 1.0 if self.cfg.hard_deadline else 2.0
+        seed_deadline = t_start + seed_factor * self.cfg.max_seconds
+        if self.cfg.hard_deadline:
+            self._deadline_at = deadline
         space = self._space()
         strategy.reset(space, self.rng, self.cfg, deadline=deadline)
 
@@ -246,14 +447,33 @@ class AlphaSparseSearch:
                         continue
                     stopped = True
                     break
+                if space.is_quarantined(prop.label):
+                    # repeat offender structure: don't even evaluate — the
+                    # strategy still observes an inf result so it moves on
+                    self.n_quarantined += 1
+                    res = CandidateResult(graph=prop.graph, seconds=math.inf,
+                                          label=prop.label, features=None)
+                    history.append(res)
+                    strategy.observe(res)
+                    continue
                 res = _timed(prop.graph, prop.label)
                 history.append(res)
                 strategy.observe(res)
 
-        wall = time.perf_counter() - t_start
         best_s, best_g, best_p = self._best
+        fallback = False
         if best_g is None:
-            raise RuntimeError("search found no valid program")
+            # every machine-designed candidate failed: fall back to the
+            # trusted baseline source-format program rather than dying —
+            # crash-riddled searches are data points, not fatalities
+            best_g, best_p, best_s = self._baseline_program()
+            fallback = True
+            self.failure_counts["fallback"] = 1
+            warnings.warn(
+                "every machine-designed candidate failed "
+                f"({dict(self.failure_counts)}); returning the baseline "
+                "jax-backend program", RuntimeWarning)
+        wall = time.perf_counter() - t_start
         # useful flops: 2*nnz per right-hand side
         gflops = 2.0 * self.m.nnz * max(self.cfg.batch_size, 1) / best_s / 1e9
         return SearchResult(best_graph=best_g, best_program=best_p,
@@ -265,7 +485,11 @@ class AlphaSparseSearch:
                             cost_model_mad=getattr(strategy,
                                                    "cost_model_mad", None),
                             pruned_ops=self.pruned_ops,
-                            strategy_name=strategy.name)
+                            strategy_name=strategy.name,
+                            failed_records=self.failed_records,
+                            failure_counts=dict(self.failure_counts),
+                            n_quarantined=self.n_quarantined,
+                            fallback=fallback)
 
 
 # ------------------------------ program cache ------------------------------

@@ -161,6 +161,28 @@ class DesignSpace:
         self._structures = structure_space(
             tuple(self._convs), tuple(self._chains),
             self.cfg.allow_branch_mix)
+        # robustness quarantine: structure labels whose candidates keep
+        # failing hard (crash/hang/OOM/wrong result) are banned from
+        # further proposals — repeat offenders are data, not retries
+        self._failure_counts: dict[str, int] = {}
+        self.quarantined: set[str] = set()
+
+    # -- quarantine (fault-tolerant search) --
+    def note_failure(self, label: str, bucket: str = "crash",
+                     threshold: int = 2) -> bool:
+        """Record one hard candidate failure against ``label`` (a structure
+        label); quarantine the structure once ``threshold`` failures have
+        accumulated. Returns True when the structure is now quarantined."""
+        if not label:
+            return False
+        n = self._failure_counts.get(label, 0) + 1
+        self._failure_counts[label] = n
+        if n >= max(threshold, 1):
+            self.quarantined.add(label)
+        return label in self.quarantined
+
+    def is_quarantined(self, label: str) -> bool:
+        return label in self.quarantined
 
     # -- pruning (paper §VI-B) --
     def _prune(self):

@@ -76,6 +76,17 @@ class FaultToleranceManager:
             st.ewma += a * delta
             st.var = (1 - a) * (st.var + a * delta * delta)
 
+    def observe_step(self, node: str, step: int, step_time: float
+                     ) -> Optional["StragglerReport"]:
+        """One-call driver hook: straggler-check this step against the
+        node's baseline *before* folding it into the EWMA (so a stuck
+        step can't dilute the very baseline that should flag it), then
+        record the heartbeat. Serving engines call this per scheduling
+        step; the training driver per training step."""
+        rep = self.check_straggler(node, step_time)
+        self.heartbeat(node, step, step_time)
+        return rep
+
     # ----------------------------- detection ------------------------------
 
     def dead_nodes(self) -> list[str]:

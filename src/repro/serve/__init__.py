@@ -1,5 +1,5 @@
 from .engine import (MatvecRequest, Request, ServeConfig,  # noqa: F401
                      ServingEngine, SpmvEngine)
 from .executor import (ModelExecutor, PlanExecutor,  # noqa: F401
-                       decode_buckets)
+                       SwapRejected, decode_buckets)
 from .sparse_linear import SparseLinear, sparsify_linear  # noqa: F401

@@ -19,6 +19,7 @@ touching any scheduling state.
 from __future__ import annotations
 
 import threading
+import warnings
 from typing import Optional
 
 import jax
@@ -30,7 +31,13 @@ from repro.models import cache_spec, decode_step, init_params
 
 from .sparse_linear import SparseLinear
 
-__all__ = ["ModelExecutor", "PlanExecutor", "decode_buckets"]
+__all__ = ["ModelExecutor", "PlanExecutor", "SwapRejected", "decode_buckets"]
+
+
+class SwapRejected(RuntimeError):
+    """An incoming hot-swap plan failed admission (warm-compile error or
+    oracle spot-check mismatch); the previous plan was retained and keeps
+    serving. ``maybe_reload`` catches this and reports no swap."""
 
 
 class ModelExecutor:
@@ -124,6 +131,7 @@ class PlanExecutor:
             else decode_buckets(plan)
         self._watch = watch
         self.swap_count = 0
+        self.rejected_swaps = 0
         self._lock = threading.Lock()
 
     # -- plan access -------------------------------------------------------
@@ -163,24 +171,74 @@ class PlanExecutor:
         for b in self.buckets:
             layer(jnp.zeros((b, n_cols), jnp.float32))
 
-    def swap_plan(self, plan, warm: bool = True) -> None:
-        """Atomic replacement: one reference assignment under a lock.
-        ``warm=True`` compiles the new plan's kernels first."""
+    def _spot_check(self, new_layer: SparseLinear) -> None:
+        """Oracle spot-check of an incoming plan on one random input.
+
+        Compared against the attached matrix's dense oracle when the
+        executor knows its matrix, else against the currently-serving
+        layer (which has been answering requests — the best available
+        reference). Tolerance admits bf16-stored plans (~2^-8 relative
+        storage rounding) while rejecting genuinely wrong programs."""
+        n_cols = getattr(new_layer.program, "n_cols", None)
+        if n_cols is None:
+            return
+        x = np.random.default_rng(0).standard_normal(
+            (1, n_cols)).astype(np.float32)
+        got = np.asarray(new_layer(jnp.asarray(x)))[0]
+        matrix = self._layer.matrix
+        if matrix is not None:
+            want = np.asarray(matrix.spmv_dense_oracle(x[0]))
+        else:
+            want = np.asarray(self._layer(jnp.asarray(x)))[0]
+        scale = np.abs(want).max() + 1e-30
+        err = np.abs(got.astype(np.float64) - want.astype(np.float64)).max()
+        if not np.isfinite(got).all() or err > 2e-2 * scale + 1e-5:
+            raise SwapRejected(
+                f"incoming plan failed its oracle spot-check "
+                f"(max abs err {err:.3e}, scale {scale:.3e}); "
+                "previous plan retained")
+
+    def swap_plan(self, plan, warm: bool = True, check: bool = True) -> None:
+        """Admission-checked atomic replacement.
+
+        The incoming plan is warm-compiled (``warm=True``) and oracle
+        spot-checked (``check=True``) *before* the reference assignment;
+        any failure raises :class:`SwapRejected` and the old plan keeps
+        serving — a bad artifact landing in the store can never take down
+        a healthy executor."""
         new_layer = SparseLinear.from_plan(plan, self._layer.matrix)
-        if warm:
-            self.warmup(new_layer)
+        try:
+            if warm:
+                self.warmup(new_layer)
+            if check:
+                self._spot_check(new_layer)
+        except SwapRejected:
+            self.rejected_swaps += 1
+            raise
+        except Exception as e:
+            self.rejected_swaps += 1
+            raise SwapRejected(
+                f"incoming plan failed warm-compile: {e!r}; "
+                "previous plan retained") from e
         with self._lock:
             self._layer = new_layer
             self.swap_count += 1
 
     def maybe_reload(self) -> bool:
-        """Poll the attached watch; swap and report True on a new plan."""
+        """Poll the attached watch; swap and report True on a new plan.
+        A plan that fails admission is rejected in place (warned, counted
+        in ``rejected_swaps``) and the watch moves on — it will only be
+        retried when the store entry changes again."""
         if self._watch is None:
             return False
         plan = self._watch.poll()
         if plan is None:
             return False
-        self.swap_plan(plan)
+        try:
+            self.swap_plan(plan)
+        except SwapRejected as e:
+            warnings.warn(str(e), RuntimeWarning)
+            return False
         return True
 
     # -- dispatch ----------------------------------------------------------

@@ -1,0 +1,381 @@
+"""Fault-tolerance tests: hardened search, crash-safe PlanStore,
+degraded-mode serving.
+
+Covers the failure model end to end: candidate crash/hang/wrong-result
+taxonomy and structure quarantine in the search, atomic checksummed plan
+persistence with verify/repair, and the serving engine's backpressure /
+deadline / retry / rollback / health machinery. The fault-injection
+*benchmark* (benchmarks/fault_inject.py) gates the same behaviors under
+load; these tests pin the unit semantics.
+"""
+import math
+import time
+
+import numpy as np
+import pytest
+
+import repro
+from repro.api import PlanIntegrityError, load_plan
+from repro.core.matrices import banded_matrix
+from repro.core.search import (FAILURE_BUCKETS, SearchConfig, fault_hook,
+                               run_search)
+from repro.design.space import DesignSpace
+from repro.ft.manager import FaultToleranceManager
+from repro.serve import (MatvecRequest, PlanExecutor, ServeConfig,
+                         ServingEngine, SpmvEngine, SwapRejected)
+from repro.serve.engine import Request
+from repro.serve.sparse_linear import _DEFAULT_GRAPH
+
+
+@pytest.fixture(scope="module")
+def matrix():
+    return banded_matrix(64, 4, seed=0)
+
+
+@pytest.fixture(scope="module")
+def plan(matrix):
+    return repro.compile(matrix, repro.Target(batch_size=4),
+                         graph=_DEFAULT_GRAPH)
+
+
+def _cfg(**kw):
+    base = dict(seed=0, max_structures=3, max_seconds=30, backend="jax",
+                coarse_samples=3, timing_repeats=1)
+    base.update(kw)
+    return SearchConfig(**base)
+
+
+# ------------------------------ search plane --------------------------------
+
+def test_candidate_crash_is_recorded_not_fatal(matrix):
+    calls = {"n": 0}
+
+    def hook(graph, y):
+        calls["n"] += 1
+        if calls["n"] % 2 == 0:
+            raise RuntimeError("injected crash")
+
+    with fault_hook(hook):
+        res = run_search(matrix, _cfg())
+    assert res.failure_counts.get("crash", 0) >= 1
+    assert res.n_failed_candidates >= 1
+    # failed candidates live in failed_records with the taxonomy status;
+    # records stays successful-only (finite seconds, features present)
+    assert all(r.status == "crash" for r in res.failed_records
+               if r.status not in ("invalid",))
+    assert all(math.isinf(r.seconds) and r.features is None
+               for r in res.failed_records)
+    assert all(math.isfinite(r.seconds) for r in res.records)
+    # the search still produced a working plan
+    x = np.ones(matrix.n_cols, np.float32)
+    assert np.allclose(np.asarray(res.best_program(x)),
+                       matrix.spmv_dense_oracle(x), atol=1e-3)
+
+
+def test_hanging_candidate_killed_by_deadline(matrix):
+    def hook(graph, y):
+        time.sleep(60)
+
+    t0 = time.perf_counter()
+    with fault_hook(hook):
+        res = run_search(matrix, _cfg(candidate_timeout_s=0.3))
+    wall = time.perf_counter() - t0
+    assert res.failure_counts.get("timeout", 0) >= 1
+    assert any(r.status == "timeout" for r in res.failed_records)
+    # every candidate hangs, so the wall is n_candidates * timeout at
+    # worst — nowhere near the 60s a single un-killed hang would cost
+    assert wall < 30, f"deadline did not bound the hang: {wall:.1f}s"
+    assert res.fallback   # nothing survived; baseline program substituted
+
+
+def test_wrong_result_candidates_rejected(matrix):
+    with fault_hook(lambda g, y: y + 1.0):
+        res = run_search(matrix, _cfg())
+    assert res.failure_counts.get("wrong_result", 0) >= 1
+    assert res.fallback
+    x = np.ones(matrix.n_cols, np.float32)
+    assert np.allclose(np.asarray(res.best_program(x)),
+                       matrix.spmv_dense_oracle(x), atol=1e-3)
+
+
+def test_quarantine_unit(matrix):
+    space = DesignSpace(matrix, _cfg(quarantine_after=2))
+    assert not space.is_quarantined("S1")
+    assert not space.note_failure("S1", "crash", threshold=2)
+    assert not space.is_quarantined("S1")     # one strike
+    assert space.note_failure("S1", "crash", threshold=2)
+    assert space.is_quarantined("S1")         # two strikes: banned
+    assert not space.is_quarantined("S2")
+
+
+def test_quarantine_skips_repeat_offenders(matrix):
+    with fault_hook(lambda g, y: (_ for _ in ()).throw(
+            RuntimeError("boom"))):
+        res = run_search(matrix, _cfg(quarantine_after=1))
+    # with every candidate crashing and a 1-strike quarantine, later
+    # proposals for the same structure are skipped, not re-evaluated
+    assert res.n_quarantined >= 1
+
+
+def test_fallback_plan_describe_and_roundtrip(matrix, tmp_path):
+    with fault_hook(lambda g, y: (_ for _ in ()).throw(
+            RuntimeError("boom"))):
+        plan = repro.compile(matrix, repro.Target(), _cfg())
+    counts = dict(plan.failure_counts)
+    assert counts["fallback"] == 1 and counts.get("crash", 0) >= 1
+    assert set(counts) <= set(FAILURE_BUCKETS)
+    assert "search failures:" in plan.describe()
+    # failure accounting survives save/load (the plan outlives the run)
+    p = tmp_path / "fb.plan.npz"
+    plan.save(p)
+    loaded = load_plan(p)
+    assert dict(loaded.failure_counts) == counts
+    assert "search failures:" in loaded.describe()
+    x = np.ones(matrix.n_cols, np.float32)
+    assert np.allclose(np.asarray(loaded(x)),
+                       matrix.spmv_dense_oracle(x), atol=1e-3)
+
+
+def test_compile_deadline_s_bounds_search(matrix):
+    def hook(graph, y):
+        time.sleep(60)
+
+    t0 = time.perf_counter()
+    with fault_hook(hook):
+        plan = repro.compile(matrix, repro.Target(),
+                             _cfg(max_seconds=5.0), deadline_s=5.0)
+    wall = time.perf_counter() - t0
+    # hard deadline: candidates inherit the time remaining, so even
+    # pure-hang candidates cannot push the whole compile far past budget
+    assert wall < 20, f"compile(deadline_s=5) took {wall:.1f}s"
+    x = np.ones(matrix.n_cols, np.float32)
+    assert np.allclose(np.asarray(plan(x)),
+                       matrix.spmv_dense_oracle(x), atol=1e-3)
+
+
+def test_no_faults_means_no_behavior_change(matrix):
+    """The robustness knobs default inert: same candidate walk with and
+    without the machinery engaged (golden-trace parity holds)."""
+    res_a = run_search(matrix, _cfg())
+    res_b = run_search(matrix, _cfg())
+    assert [r.structure for r in res_a.records] == \
+        [r.structure for r in res_b.records]
+    assert not res_a.fallback and res_a.n_quarantined == 0
+    hard = {"crash", "oom", "timeout", "wrong_result"}
+    assert not hard & set(res_a.failure_counts)
+
+
+# ------------------------------- store plane --------------------------------
+
+def test_atomic_save_leaves_no_temp_droppings(plan, tmp_path):
+    p = tmp_path / "x.plan.npz"
+    plan.save(p)
+    plan.save(p)          # overwrite is atomic too
+    assert [f.name for f in tmp_path.iterdir()] == ["x.plan.npz"]
+    assert load_plan(p) is not None
+
+
+def test_checksum_detects_tampering(plan, tmp_path, matrix):
+    p = tmp_path / "x.plan.npz"
+    plan.save(p)
+    # rewrite with one array perturbed and the original header kept:
+    # the zip container is valid, only the content checksum can object
+    z = np.load(p)
+    arrays = {k: z[k] for k in z.files if k != "__plan__"}
+    header = str(z["__plan__"])
+    akey = next(k for k in sorted(arrays)
+                if arrays[k].dtype == np.float32)
+    arrays[akey] = arrays[akey] + 1.0
+    with p.open("wb") as f:
+        np.savez(f, __plan__=np.str_(header), **arrays)
+    with pytest.raises(PlanIntegrityError):
+        load_plan(p)
+
+
+def test_truncated_entry_recompiles_watch_retries_verify_quarantines(
+        matrix, plan, tmp_path):
+    store = repro.PlanStore(tmp_path)
+    target = repro.Target(batch_size=4)
+    store.put(matrix, target, None, None, plan)
+    path = store._path(store.key(matrix, target))
+    watch = store.watch(matrix, target)
+
+    raw = path.read_bytes()
+    path.write_bytes(raw[: len(raw) // 2])       # half-written entry
+
+    # get(): a corrupt entry is a warned miss -> caller recompiles
+    with pytest.warns(RuntimeWarning, match="unusable"):
+        assert store.get(matrix, target) is None
+    # watch: poll skips the torn file and keeps the old plan serving
+    assert watch.poll() is None
+    # verify flags it; repair quarantines entry + sidecar
+    report = store.verify()
+    assert [k for k, _ in report["corrupt"]] == [store.key(matrix, target)]
+    quarantined = store.repair()
+    assert quarantined == [store.key(matrix, target)]
+    assert not path.exists()
+    qdir = tmp_path / "quarantine"
+    assert len(list(qdir.glob("*.plan.npz"))) == 1
+    assert store.verify() == {"ok": [], "corrupt": []}
+    # a fresh put lands atomically and the watch picks it up
+    store.put(matrix, target, None, None, plan)
+    assert watch.poll() is not None
+
+
+# ------------------------------- serve plane --------------------------------
+
+def _engine(matrix, plan, **kw):
+    ex = PlanExecutor(plan, matrix)
+    return ex, SpmvEngine(ex, **kw)
+
+
+def test_backpressure_and_deadline_responses(matrix, plan):
+    ex, eng = _engine(matrix, plan, max_queue=4)
+    rng = np.random.default_rng(0)
+    reqs = [MatvecRequest(i, rng.standard_normal(matrix.n_cols)
+                          .astype(np.float32)) for i in range(10)]
+    admitted = [r for r in reqs if eng.enqueue(r)]
+    rejected = [r for r in reqs if r.status == "rejected"]
+    assert len(admitted) == 4 and len(rejected) == 6
+    assert all(r.retry_after_s is not None and r.error for r in rejected)
+
+    expired = MatvecRequest(99, rng.standard_normal(matrix.n_cols)
+                            .astype(np.float32), deadline_s=1e-4)
+    # one slot freed per drained bucket, so this is admitted after a step
+    eng.step()
+    assert eng.enqueue(expired)
+    time.sleep(0.01)
+    stats = eng.run([])
+    assert expired.status == "timeout" and expired.error
+    assert stats["dropped"] == 0
+    assert stats["rejected"] == 6 and stats["timed_out"] == 1
+    for r in admitted:
+        assert r.status == "ok"
+        assert np.allclose(r.y, matrix.spmv_dense_oracle(r.x), atol=1e-4)
+
+
+def test_retry_recovers_and_health_heals(matrix, plan):
+    ex, eng = _engine(matrix, plan, max_retries=2, retry_backoff_s=0.001,
+                      heal_after=2)
+    orig, calls = ex.execute, {"n": 0}
+
+    def flaky(xs):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient")
+        return orig(xs)
+
+    ex.execute = flaky
+    r = MatvecRequest(0, np.ones(matrix.n_cols, np.float32))
+    eng.enqueue(r)
+    eng.step()
+    assert r.status == "ok"                      # retry recovered it
+    assert eng.health == "degraded"              # but the engine noticed
+    assert eng.recovery_latencies and eng.recovery_latencies[0] > 0
+    ex.execute = orig
+    for i in range(2):                           # heal_after clean steps
+        rr = MatvecRequest(1 + i, np.ones(matrix.n_cols, np.float32))
+        eng.enqueue(rr)
+        eng.step()
+    assert eng.health == "healthy"
+
+
+def test_exhausted_retries_fail_explicitly(matrix, plan):
+    ex, eng = _engine(matrix, plan, max_retries=1, retry_backoff_s=0.001)
+
+    def dead(xs):
+        raise RuntimeError("permanent")
+
+    ex.execute = dead
+    r = MatvecRequest(0, np.ones(matrix.n_cols, np.float32))
+    eng.enqueue(r)
+    out = eng.step()
+    assert r in out
+    assert r.status == "failed" and "permanent" in r.error
+    assert eng.health == "failed"
+    assert eng.failed == 1
+
+
+def test_swap_rollback_on_wrong_plan(matrix, plan):
+    ex = PlanExecutor(plan, matrix)
+    ex.warmup()
+    bad = repro.compile(matrix, repro.Target(batch_size=4),
+                        graph=_DEFAULT_GRAPH)
+    bad.fmt = {k: (v + 1.0 if str(v.dtype) == "float32" else v)
+               for k, v in bad.fmt.items()}
+    with pytest.raises(SwapRejected):
+        ex.swap_plan(bad)
+    assert ex.rejected_swaps == 1 and ex.swap_count == 0
+    # the old plan is still the serving reference and still correct
+    x = np.ones((1, matrix.n_cols), np.float32)
+    assert np.allclose(np.asarray(ex.execute(x))[0],
+                       matrix.spmv_dense_oracle(x[0]), atol=1e-4)
+    # a correct plan still swaps
+    good = repro.compile(matrix, repro.Target(batch_size=4),
+                        graph=_DEFAULT_GRAPH)
+    ex.swap_plan(good)
+    assert ex.swap_count == 1
+
+
+def test_ft_heartbeats_flag_stuck_steps(matrix, plan):
+    ft = FaultToleranceManager()
+    ex, eng = _engine(matrix, plan, ft=ft)
+    rng = np.random.default_rng(0)
+    # build a step-time baseline, then one stuck step via a slow execute
+    for i in range(12):
+        eng.enqueue(MatvecRequest(i, rng.standard_normal(matrix.n_cols)
+                                  .astype(np.float32)))
+        eng.step()
+    orig = ex.execute
+
+    def slow(xs):
+        time.sleep(0.25)
+        return orig(xs)
+
+    ex.execute = slow
+    eng.enqueue(MatvecRequest(99, rng.standard_normal(matrix.n_cols)
+                              .astype(np.float32)))
+    eng.step()
+    assert eng.stuck_steps >= 1
+    assert eng.health == "degraded"
+    assert ft.stragglers()
+
+
+def test_prefill_failure_marks_request_and_frees_slot():
+    from repro.configs import get_config
+    cfg = get_config("granite-3-2b").reduced()
+    eng = ServingEngine(cfg, ServeConfig(max_batch=2, max_seq=64,
+                                         max_new_tokens=4))
+    orig = eng.executor.decode
+
+    def boom(*a, **kw):
+        raise RuntimeError("injected prefill failure")
+
+    eng.executor.decode = boom
+    req = Request(0, np.array([1, 2, 3]))
+    with pytest.raises(RuntimeError, match="injected prefill"):
+        eng.submit(req)
+    # the slot rolled back AND the request closed out with the error
+    assert req.failed and "injected prefill" in req.error
+    assert req.t_done is not None and not eng.active
+    assert sorted(eng.free) == [0, 1]
+    eng.executor.decode = orig
+    ok = Request(1, np.array([1, 2, 3]))
+    assert eng.submit(ok)
+    eng.run([])
+    assert ok.done and not ok.failed
+
+
+def test_serving_run_guards_configurable():
+    from repro.configs import get_config
+    cfg = get_config("granite-3-2b").reduced()
+    eng = ServingEngine(cfg, ServeConfig(max_batch=1, max_seq=64,
+                                         max_new_tokens=8, max_steps=2))
+    with pytest.raises(RuntimeError, match="did not terminate within "
+                                           "2 steps"):
+        eng.run([Request(0, np.array([1, 2, 3]))])
+    eng2 = ServingEngine(cfg, ServeConfig(max_batch=1, max_seq=64,
+                                          max_new_tokens=8,
+                                          max_wall_s=0.0))
+    with pytest.raises(RuntimeError, match="did not terminate within"):
+        eng2.run([Request(0, np.array([1, 2, 3]))])
