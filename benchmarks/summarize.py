@@ -22,7 +22,9 @@ _HEADLINES = ("n_speedup_ok", "n_devices", "dedup_ok_at_4plus_shards",
               "throughput_ceiling_rps", "hot_swaps",
               "requests_dropped", "recovery_latency_max_s",
               "rejected_swaps", "n_failed_candidates",
-              "store_entries_quarantined")
+              "store_entries_quarantined", "update_speedup_x",
+              "updates_in_place", "drift_events", "researches_landed",
+              "oracle_max_rel_err")
 
 
 def summarize(bench_dir: Path) -> dict:

@@ -51,6 +51,12 @@ _EXPORTS = {
     "GridStrategy": "repro.design.strategies",
     "CostModelGuidedStrategy": "repro.design.strategies",
     "register_strategy": "repro.design.strategies",
+    # dynamic sparsity (repro.dyn): patch-in-place plans + drift re-search
+    "dyn": None,                        # submodule, imported lazily
+    "PatternDelta": "repro.dyn",
+    "DriftPolicy": "repro.dyn",
+    "DynamicSparsityManager": "repro.dyn",
+    "CapacityError": "repro.dyn",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -252,6 +252,12 @@ class SpmvPlan:
     # sorted tuple of (taxonomy bucket, count) pairs — serialized, so a
     # plan born from a crash-riddled search stays visible after the fact
     failure_counts: Optional[tuple] = None
+    # monotonic lineage version, bumped by every in-place update() and
+    # background re-search adoption (repro.dyn). Serialized in the plan
+    # header so hot-swap admission can reject a stale re-published store
+    # entry; deliberately NOT part of the pytree aux data — bumping it
+    # must never retrace jitted callers
+    plan_version: int = 0
     # ephemeral: the full SearchResult when this plan came from a live
     # search in this process (not serialized, not part of the pytree)
     search_result: Optional[SearchResult] = dataclasses.field(
@@ -293,6 +299,22 @@ class SpmvPlan:
                            self.target.interpret)
         return fn(self.fmt, x)
 
+    # -- dynamic sparsity --------------------------------------------------
+    def update(self, delta) -> "SpmvPlan":
+        """Patch-in-place dynamic-sparsity step (``repro.dyn``).
+
+        Applies a :class:`repro.dyn.PatternDelta` to the packed format
+        arrays — new leaves, same static treedef, no Operator Graph
+        replay, no kernel rebuild, no jit retrace — and returns the
+        patched plan with ``plan_version + 1``. Raises
+        ``repro.dyn.CapacityError`` when the delta does not fit the
+        format in place (escalate to ``repro.dyn.DynamicSparsityManager``
+        or a fresh :func:`compile`). For streams of deltas, hold a
+        ``repro.dyn.PlanPatcher`` instead: it keeps the capacity index
+        across calls, making each update O(delta)."""
+        from repro.dyn.update import update_plan
+        return update_plan(self, delta)
+
     # -- reporting ---------------------------------------------------------
     def describe(self) -> str:
         spec = self.spec
@@ -312,6 +334,8 @@ class SpmvPlan:
             lines.append(f"  search failures: {buckets}")
         for s in spec["steps"]:
             lines.append(f"  step {s['key']}: {s['report']}")
+        from repro.dyn.capacity import capacity_lines
+        lines.extend(capacity_lines(self))
         return "\n".join(lines)
 
     def cost_analysis(self, batch_size: Optional[int] = None) -> dict:
@@ -324,7 +348,12 @@ class SpmvPlan:
         fn = _dense_kernel(self.spec_json, self.target.backend,
                            self.target.interpret)
         compiled = fn.lower(self.fmt, x).compile()
-        return normalize_cost_analysis(compiled.cost_analysis())
+        out = normalize_cost_analysis(compiled.cost_analysis())
+        # format capacity headroom (repro.dyn): how much pattern mutation
+        # this plan can absorb in place before a re-search is needed
+        from repro.dyn.capacity import capacity_report
+        out["capacity"] = capacity_report(self)
+        return out
 
     # -- serialization -----------------------------------------------------
     def save(self, path) -> None:
@@ -334,6 +363,7 @@ class SpmvPlan:
                                                else json.loads(self.graph_json)),
                   "target": self.target.spec_dict(),
                   "search_gflops": self.search_gflops,
+                  "plan_version": int(self.plan_version),
                   "failure_counts": (None if self.failure_counts is None
                                      else [list(p)
                                            for p in self.failure_counts])}
@@ -447,6 +477,15 @@ class ShardedSpmvPlan:
                             [stop - start for start, stop in self.bounds],
                             dtype=_x_dtype(self.target))
 
+    def update(self, delta):
+        """Sharded plans do not support patch-in-place updates: a delta
+        can move nnz across shard bounds, which changes the static shard
+        geometry. Re-compile for the mutated matrix instead."""
+        raise NotImplementedError(
+            "ShardedSpmvPlan.update is not supported (a PatternDelta can "
+            "cross shard bounds); re-run repro.compile on the mutated "
+            "matrix")
+
     def describe(self) -> str:
         steps = json.loads(self.steps_json)
         lines = [f"ShardedSpmvPlan {self.n_rows}x{self.n_cols} "
@@ -543,7 +582,8 @@ def load_plan(path, mesh=None) -> Union[SpmvPlan, ShardedSpmvPlan]:
                 target=_target_from_dict(header["target"]),
                 search_gflops=header.get("search_gflops"),
                 failure_counts=(None if fc is None
-                                else tuple((k, int(v)) for k, v in fc)))
+                                else tuple((k, int(v)) for k, v in fc)),
+                plan_version=int(header.get("plan_version", 0)))
         target = _target_from_dict(header["target"], mesh=mesh)
         stacks = _npz_restore("stack", z)
         if mesh is not None:

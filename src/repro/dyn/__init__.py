@@ -1,0 +1,32 @@
+"""repro.dyn — incremental recompilation for dynamic sparsity.
+
+The pattern changes; the machine-designed format survives as long as it
+can. Three layers (see ``docs/API.md`` "Dynamic sparsity"):
+
+* :class:`PatternDelta` — added/removed/revalued nonzeros between two
+  ``SparseMatrix`` states (from matrices or prune masks).
+* capacity + patching — :func:`capacity_report`/:func:`check_capacity`
+  prove a delta fits the plan's packed arrays in place;
+  :func:`update_plan` / :class:`PlanPatcher` (the ``SpmvPlan.update``
+  backend) patch vals/cols with new leaves under the same static
+  treedef, so jitted callers don't retrace.
+* :class:`DriftPolicy` + :class:`DynamicSparsityManager` — statistical
+  drift of the live pattern escalates to a background re-search
+  published through the ``PlanStore``/``PlanExecutor`` hot-swap
+  admission gate.
+"""
+from .capacity import capacity_lines, capacity_report  # noqa: F401
+from .delta import PatternDelta, same_pattern  # noqa: F401
+from .drift import DriftPolicy, DriftReport, pattern_stats  # noqa: F401
+from .manager import DynamicSparsityManager  # noqa: F401
+from .update import (CapacityCheck, CapacityError,  # noqa: F401
+                     PlanPatcher, check_capacity, update_plan)
+
+__all__ = [
+    "PatternDelta", "same_pattern",
+    "capacity_report", "capacity_lines",
+    "CapacityError", "CapacityCheck", "PlanPatcher", "check_capacity",
+    "update_plan",
+    "DriftPolicy", "DriftReport", "pattern_stats",
+    "DynamicSparsityManager",
+]

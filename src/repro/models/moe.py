@@ -147,3 +147,25 @@ def apply_moe(cfg: ArchConfig, p: dict, x: Array):
             h = jax.nn.gelu(up)
         y = y + h @ p["sh_down"].astype(x.dtype)
     return y, aux
+
+
+def routing_matrix(idx, gate_vals, n_experts: int):
+    """The routing table as a sparse matrix: rows=tokens, cols=experts.
+
+    Dispatch *is* SpMV (DESIGN.md §4): ``R[t, e] = gate`` when token t
+    routes to expert e. ``idx``/``gate_vals`` are the router's top-k
+    outputs, ``(B, S, K)`` or ``(T, K)`` — batch/sequence axes are
+    flattened to one token axis. Routing churn between steps is then just
+    ``repro.dyn.PatternDelta.from_matrices(routing_matrix(...),
+    routing_matrix(...))``, which the serving plane patches in place
+    (every token keeps exactly K entries, so a re-route always fits an
+    ELL lane of width K). Zero gates are dropped (canonical storage).
+    """
+    from repro.core.matrices import SparseMatrix
+    idx = np.asarray(idx).reshape(-1, np.asarray(idx).shape[-1])
+    gates = np.asarray(gate_vals, np.float32).reshape(idx.shape)
+    n_tokens, k = idx.shape
+    rows = np.repeat(np.arange(n_tokens, dtype=np.int32), k)
+    return SparseMatrix(n_tokens, int(n_experts), rows,
+                        idx.reshape(-1).astype(np.int32),
+                        gates.reshape(-1)).canonical()

@@ -127,11 +127,17 @@ class PlanExecutor:
 
     def __init__(self, plan, matrix=None, buckets=None, watch=None):
         self._layer = SparseLinear.from_plan(plan, matrix)
+        # the *current* reference matrix: tracks every dynamic-sparsity
+        # update (apply_update) so swap admission always judges incoming
+        # plans against what is being served today, not the compile-time
+        # pattern
+        self._oracle_matrix = matrix
         self.buckets = tuple(sorted(buckets)) if buckets \
             else decode_buckets(plan)
         self._watch = watch
         self.swap_count = 0
         self.rejected_swaps = 0
+        self.update_count = 0
         self._lock = threading.Lock()
 
     # -- plan access -------------------------------------------------------
@@ -171,21 +177,35 @@ class PlanExecutor:
         for b in self.buckets:
             layer(jnp.zeros((b, n_cols), jnp.float32))
 
-    def _spot_check(self, new_layer: SparseLinear) -> None:
+    def set_reference_matrix(self, matrix) -> None:
+        """Point swap admission at a new oracle matrix.
+
+        Called by ``repro.dyn.DynamicSparsityManager`` right before it
+        publishes a re-searched plan for a *mutated* pattern: the
+        incoming plan encodes the new matrix, so admission must judge it
+        against that matrix — the old one would veto every legitimate
+        re-design."""
+        with self._lock:
+            self._oracle_matrix = matrix
+
+    def _spot_check(self, new_layer: SparseLinear, matrix=None) -> None:
         """Oracle spot-check of an incoming plan on one random input.
 
-        Compared against the attached matrix's dense oracle when the
-        executor knows its matrix, else against the currently-serving
-        layer (which has been answering requests — the best available
-        reference). Tolerance admits bf16-stored plans (~2^-8 relative
-        storage rounding) while rejecting genuinely wrong programs."""
+        Compared against the *current* reference matrix's dense oracle
+        (init matrix, kept up to date by ``apply_update`` /
+        ``set_reference_matrix``) when the executor knows one, else
+        against the currently-serving layer (which has been answering
+        requests — the best available reference). Tolerance admits
+        bf16-stored plans (~2^-8 relative storage rounding) while
+        rejecting genuinely wrong programs."""
         n_cols = getattr(new_layer.program, "n_cols", None)
         if n_cols is None:
             return
         x = np.random.default_rng(0).standard_normal(
             (1, n_cols)).astype(np.float32)
         got = np.asarray(new_layer(jnp.asarray(x)))[0]
-        matrix = self._layer.matrix
+        if matrix is None:
+            matrix = self._oracle_matrix
         if matrix is not None:
             want = np.asarray(matrix.spmv_dense_oracle(x[0]))
         else:
@@ -201,12 +221,22 @@ class PlanExecutor:
     def swap_plan(self, plan, warm: bool = True, check: bool = True) -> None:
         """Admission-checked atomic replacement.
 
-        The incoming plan is warm-compiled (``warm=True``) and oracle
-        spot-checked (``check=True``) *before* the reference assignment;
-        any failure raises :class:`SwapRejected` and the old plan keeps
-        serving — a bad artifact landing in the store can never take down
-        a healthy executor."""
-        new_layer = SparseLinear.from_plan(plan, self._layer.matrix)
+        The incoming plan is version-checked against the serving plan's
+        ``plan_version`` (a re-published *stale* store entry must never
+        clobber a live plan that has absorbed in-place updates), then
+        warm-compiled (``warm=True``) and oracle spot-checked
+        (``check=True``) *before* the reference assignment; any failure
+        raises :class:`SwapRejected` and the old plan keeps serving — a
+        bad artifact landing in the store can never take down a healthy
+        executor."""
+        incoming_v = int(getattr(plan, "plan_version", 0))
+        current_v = int(getattr(self.plan, "plan_version", 0))
+        if incoming_v < current_v:
+            self.rejected_swaps += 1
+            raise SwapRejected(
+                f"incoming plan version {incoming_v} is stale (serving "
+                f"version {current_v}); previous plan retained")
+        new_layer = SparseLinear.from_plan(plan, self._oracle_matrix)
         try:
             if warm:
                 self.warmup(new_layer)
@@ -223,6 +253,24 @@ class PlanExecutor:
         with self._lock:
             self._layer = new_layer
             self.swap_count += 1
+
+    def apply_update(self, plan, matrix=None, check: bool = True) -> None:
+        """Adopt a patch-in-place updated plan (``repro.dyn``).
+
+        Unlike :meth:`swap_plan` there is no warmup: the updated plan
+        has the same treedef and leaf shapes as the serving one, so the
+        jitted dispatch is already compiled — adoption is one reference
+        assignment. ``matrix`` (the mutated ``SparseMatrix``) becomes the
+        new admission reference; the optional spot-check verifies the
+        patched plan against it before adoption."""
+        ref = matrix if matrix is not None else self._oracle_matrix
+        new_layer = SparseLinear.from_plan(plan, ref)
+        if check:
+            self._spot_check(new_layer, matrix=ref)
+        with self._lock:
+            self._layer = new_layer
+            self._oracle_matrix = ref
+            self.update_count += 1
 
     def maybe_reload(self) -> bool:
         """Poll the attached watch; swap and report True on a new plan.

@@ -68,6 +68,21 @@ class SparseLinear:
         return cls(matrix, getattr(plan, "graph", None), plan,
                    getattr(plan, "search_gflops", None))
 
+    def update(self, delta) -> "SparseLinear":
+        """Dynamic-sparsity step: patch the plan in place (``repro.dyn``).
+
+        Applies a ``repro.dyn.PatternDelta`` to the wrapped plan (same
+        treedef, no retrace — see ``SpmvPlan.update``) and to the
+        attached matrix, returning a new layer. Raises
+        ``repro.dyn.CapacityError`` when the delta does not fit the
+        format; escalate to ``repro.dyn.DynamicSparsityManager`` (which
+        re-searches in the background) or a fresh ``repro.compile``."""
+        new_program = self.program.update(delta)
+        new_matrix = (delta.apply_to(self.matrix)
+                      if self.matrix is not None else None)
+        return dataclasses.replace(self, matrix=new_matrix,
+                                   program=new_program)
+
     def __call__(self, x: jax.Array) -> jax.Array:
         """x: (n_cols,) or (B, n_cols) -> (n_rows,) or (B, n_rows)."""
         if x.ndim == 1:

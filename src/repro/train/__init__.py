@@ -1,2 +1,4 @@
 from .optimizer import AdamWConfig, adamw_init, adamw_update, lr_schedule  # noqa: F401
 from .step import TrainConfig, make_train_step  # noqa: F401
+from .dynamic import (PruningLoopReport, capacity_graph,  # noqa: F401
+                      run_pruning_loop)

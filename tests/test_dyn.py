@@ -1,0 +1,467 @@
+"""repro.dyn: incremental recompilation for dynamic sparsity.
+
+Covers the dyn contract end to end: PatternDelta extraction, capacity
+reporting, patch-in-place updates (oracle-exact, bit-exact vs a fresh
+compile, no retrace), out-of-capacity rollback, executor admission
+(versioned hot-swap + apply_update), the DynamicSparsityManager control
+loop (drift -> background re-search -> catch-up -> publish), the MoE
+routing-churn scenario, and the train/ pruning loop.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core.matrices import SparseMatrix, powerlaw_matrix
+from repro.core.search import SearchConfig
+from repro.dyn import (CapacityError, DriftPolicy, DynamicSparsityManager,
+                       PatternDelta, PlanPatcher, capacity_report,
+                       check_capacity, pattern_stats, same_pattern)
+from repro.serve.executor import PlanExecutor, SwapRejected
+from repro.serve.sparse_linear import SparseLinear, prune_magnitude
+from repro.train.dynamic import capacity_graph, run_pruning_loop
+
+
+def _base_matrix(seed=3):
+    return powerlaw_matrix(96, 96, 12.0, 1.2, seed=seed)
+
+
+@pytest.fixture(scope="module")
+def base_plan():
+    m = _base_matrix()
+    plan = repro.compile(m, repro.Target(), graph=capacity_graph())
+    return m, plan
+
+
+def _mutate(m: SparseMatrix, seed=0, frac_rev=0.1, frac_drop=0.05,
+            n_add=8) -> SparseMatrix:
+    """A small in-capacity mutation: revalue, drop, and add entries
+    (adds target rows that just lost an entry, so they always fit)."""
+    rng = np.random.default_rng(seed)
+    rows = np.asarray(m.rows)
+    cols = np.asarray(m.cols)
+    vals = np.array(m.vals, np.float32)
+    nnz = vals.size
+    rev = rng.choice(nnz, max(1, int(nnz * frac_rev)), replace=False)
+    vals[rev] = rng.standard_normal(rev.size).astype(np.float32) + 0.1
+    drop = rng.choice(nnz, max(n_add, int(nnz * frac_drop)), replace=False)
+    keep = np.ones(nnz, bool)
+    keep[drop] = False
+    add_rows, add_cols, add_vals = [], [], []
+    taken = {(int(r), int(c)) for r, c in zip(rows, cols)}
+    for i in drop[:n_add]:
+        r = int(rows[i])
+        for _ in range(20):
+            c = int(rng.integers(0, m.n_cols))
+            if (r, c) not in taken:
+                taken.add((r, c))
+                add_rows.append(r)
+                add_cols.append(c)
+                add_vals.append(float(rng.standard_normal()) + 0.1)
+                break
+    return SparseMatrix(
+        m.n_rows, m.n_cols,
+        np.concatenate([rows[keep], np.array(add_rows, np.int32)]),
+        np.concatenate([cols[keep], np.array(add_cols, np.int32)]),
+        np.concatenate([vals[keep],
+                        np.array(add_vals, np.float32)])).canonical()
+
+
+def _x(m, seed=0):
+    return np.random.default_rng(seed).standard_normal(
+        m.n_cols).astype(np.float32)
+
+
+def _assert_oracle(m, program, rtol=1e-5):
+    x = _x(m)
+    want = m.spmv_dense_oracle(x)
+    got = np.asarray(program(x), np.float64)
+    scale = np.abs(want).max() + 1e-30
+    np.testing.assert_allclose(got, want, atol=rtol * scale, rtol=0)
+
+
+# ------------------------- PatternDelta ------------------------------------
+
+def test_delta_from_matrices_roundtrip():
+    m0 = _base_matrix()
+    m1 = _mutate(m0, seed=1)
+    d = PatternDelta.from_matrices(m0, m1)
+    assert d.n_added > 0 and d.n_removed > 0 and d.n_revalued > 0
+    assert not d.is_empty
+    # applying the delta reconstructs the target exactly
+    m2 = d.apply_to(m0)
+    assert same_pattern(m2, m1)
+    np.testing.assert_array_equal(np.asarray(m2.vals), np.asarray(m1.vals))
+    # self-delta is empty
+    assert PatternDelta.from_matrices(m1, m1).is_empty
+    assert "PatternDelta" in repr(d)
+    assert d.affected_rows().size > 0
+
+
+def test_delta_from_masks():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((16, 16)).astype(np.float32)
+    old = np.abs(w) > 1.0
+    new = np.abs(w) > 0.8
+    d = PatternDelta.from_masks(w, old, new)
+    assert d.n_added == int((new & ~old).sum())
+    assert d.n_removed == int((old & ~new).sum())
+
+
+# ------------------------- capacity reporting (satellite 1) ----------------
+
+def test_capacity_report_and_describe(base_plan):
+    m, plan = base_plan
+    rep = capacity_report(plan)
+    assert rep["live_nnz"] == m.nnz
+    assert rep["ell_slack"] > 0          # LANE_PAD provisioned headroom
+    assert rep["plan_version"] == 0
+    assert rep["int16_col_margin"] is None or rep["int16_col_margin"] >= 0
+    for step in rep["steps"]:
+        assert step["slots"] >= step["used"]
+    # the same numbers surface in describe() and cost_analysis()
+    assert "capacity" in plan.describe()
+    assert "capacity" in plan.cost_analysis()
+
+
+# ------------------------- patch-in-place ----------------------------------
+
+def test_update_bitexact_vs_fresh_compile(base_plan):
+    m, plan = base_plan
+    m1 = _mutate(m, seed=2)
+    delta = PatternDelta.from_matrices(m, m1)
+    assert check_capacity(plan, delta)
+    upd = plan.update(delta)
+    fresh = repro.compile(m1, repro.Target(), graph=capacity_graph())
+    x = _x(m)
+    y_upd = np.asarray(upd(x))
+    y_fresh = np.asarray(fresh(x))
+    # repacking restores the builder's packing invariant, so the update
+    # is bit-identical to compiling the mutated matrix from scratch
+    np.testing.assert_array_equal(y_upd, y_fresh)
+    _assert_oracle(m1, upd)
+    # version advances; the source plan is untouched
+    assert upd.plan_version == plan.plan_version + 1
+    _assert_oracle(m, plan)
+
+
+def test_update_no_retrace_same_treedef(base_plan):
+    m, plan = base_plan
+    upd = plan.update(PatternDelta.from_matrices(m, _mutate(m, seed=4)))
+    assert (jax.tree_util.tree_structure(upd) ==
+            jax.tree_util.tree_structure(plan))
+    traces = []
+
+    @jax.jit
+    def run(p, x):
+        traces.append(1)
+        return p(x)
+
+    x = jnp.asarray(_x(m))
+    run(plan, x)
+    run(upd, x)
+    assert len(traces) == 1, "patched plan must reuse the compiled dispatch"
+
+
+def test_update_out_of_capacity_rolls_back(base_plan):
+    m, plan = base_plan
+    # a brand-new row-dense region cannot fit any lane slack
+    r = int(np.asarray(m.rows)[0])
+    cols = [c for c in range(m.n_cols)
+            if not ((np.asarray(m.rows) == r)
+                    & (np.asarray(m.cols) == c)).any()]
+    big = SparseMatrix(
+        m.n_rows, m.n_cols,
+        np.concatenate([np.asarray(m.rows),
+                        np.full(len(cols), r, np.int32)]),
+        np.concatenate([np.asarray(m.cols), np.array(cols, np.int32)]),
+        np.concatenate([np.asarray(m.vals),
+                        np.ones(len(cols), np.float32)])).canonical()
+    delta = PatternDelta.from_matrices(m, big)
+    check = check_capacity(plan, delta)
+    assert not check and check.reasons
+    with pytest.raises(CapacityError):
+        plan.update(delta)
+    # failed apply must leave the plan byte-identical (transactional)
+    _assert_oracle(m, plan)
+
+
+def test_update_seg_family(base_plan):
+    from repro.core.graph import OperatorGraph
+    from repro.core.operators import OpSpec
+    m, _ = base_plan
+    seg = OperatorGraph.chain(
+        OpSpec.make("COMPRESS"),
+        OpSpec.make("LANE_NNZ_BLOCK", chunk=64, lanes=8),
+        OpSpec.make("SEG_SCAN_RED"))
+    plan = repro.compile(m, repro.Target(), graph=seg)
+    # removals create holes; later adds into the same rows refill them
+    m1 = _mutate(m, seed=5, n_add=4)
+    upd = plan.update(PatternDelta.from_matrices(m, m1))
+    _assert_oracle(m1, upd)
+
+
+def test_update_bf16_quantizes_through_storage(base_plan):
+    m, _ = base_plan
+    plan = repro.compile(m, repro.Target(dtype="bfloat16"),
+                         graph=capacity_graph())
+    m1 = _mutate(m, seed=6)
+    upd = plan.update(PatternDelta.from_matrices(m, m1))
+    # bf16 storage rounds values to ~2^-8 relative precision
+    _assert_oracle(m1, upd, rtol=2e-2)
+
+
+def test_sparse_linear_update(base_plan):
+    m, plan = base_plan
+    layer = SparseLinear.from_plan(plan, m)
+    m1 = _mutate(m, seed=7)
+    new_layer = layer.update(PatternDelta.from_matrices(m, m1))
+    assert same_pattern(new_layer.matrix, m1)
+    _assert_oracle(m1, new_layer)
+    _assert_oracle(m, layer)            # the old layer is untouched
+
+
+def test_plan_version_save_load_roundtrip(base_plan, tmp_path):
+    m, plan = base_plan
+    upd = plan.update(PatternDelta.from_matrices(m, _mutate(m, seed=8)))
+    upd = dataclasses.replace(upd, plan_version=7)
+    path = tmp_path / "p.plan.npz"
+    upd.save(path)
+    back = repro.load_plan(path)
+    assert back.plan_version == 7
+    x = _x(m)
+    np.testing.assert_array_equal(np.asarray(back(x)), np.asarray(upd(x)))
+
+
+# ------------------------- executor admission (satellite 2) ----------------
+
+def test_executor_rejects_stale_version_and_applies_updates(base_plan):
+    m, plan = base_plan
+    ex = PlanExecutor(plan, matrix=m)
+    m1 = _mutate(m, seed=9)
+    upd = plan.update(PatternDelta.from_matrices(m, m1))
+    ex.apply_update(upd, m1)
+    assert ex.update_count == 1
+    assert ex.plan.plan_version == 1
+    # re-publishing the stale birth plan must not clobber the live one
+    with pytest.raises(SwapRejected):
+        ex.swap_plan(plan)
+    assert ex.rejected_swaps == 1
+    assert ex.plan is upd
+    # spot-check runs against the *current* matrix: a fresh compile of
+    # the mutated pattern (same version) is admitted
+    fresh = repro.compile(m1, repro.Target(), graph=capacity_graph())
+    fresh = dataclasses.replace(fresh, plan_version=2)
+    ex.swap_plan(fresh)
+    assert ex.swap_count == 1
+    out = ex.execute(_x(m)[None, :])
+    want = m1.spmv_dense_oracle(_x(m))
+    np.testing.assert_allclose(out[0], want,
+                               atol=1e-5 * (np.abs(want).max() + 1e-30),
+                               rtol=0)
+
+
+# ------------------------- manager control loop ----------------------------
+
+def test_manager_drift_research_publish(base_plan, tmp_path):
+    m, plan = base_plan
+    store = repro.PlanStore(tmp_path)
+    store.put(m, plan.target, None, None, plan)
+    watch = store.watch(m, plan.target)
+    watch.poll()                         # arm: birth plan already seen
+    ex = PlanExecutor(plan, matrix=m, watch=watch)
+    mgr = DynamicSparsityManager(
+        m, plan, executor=ex, store=store,
+        research_budget=SearchConfig(max_seconds=2, max_structures=2),
+        research_deadline_s=8.0)
+    try:
+        # drop ~35% of nnz: fits capacity (pure removal) but walks the
+        # stats past DriftPolicy's 1.3x nnz fold-change
+        rng = np.random.default_rng(0)
+        keep = np.ones(m.nnz, bool)
+        keep[rng.choice(m.nnz, int(m.nnz * 0.35), replace=False)] = False
+        m1 = SparseMatrix(m.n_rows, m.n_cols,
+                          np.asarray(m.rows)[keep],
+                          np.asarray(m.cols)[keep],
+                          np.asarray(m.vals)[keep]).canonical()
+        out = mgr.apply(PatternDelta.from_matrices(m, m1))
+        assert out["action"] == "update+research"
+        assert mgr.drift_events == 1
+        _assert_oracle(m1, mgr.plan)
+        assert mgr.quiesce(timeout=120.0)
+        res = mgr.poll()
+    finally:
+        mgr.quiesce(timeout=120.0)
+    assert res is None or res["action"] in ("adopted", "research_restart")
+    assert mgr.researches_landed >= 1
+    assert mgr.plan.plan_version >= 1
+    _assert_oracle(mgr.matrix, mgr.plan)
+    # the publication went through the store and wakes the serving watch
+    assert ex.maybe_reload()
+    assert ex.swap_count == 1
+    _assert_oracle(m1, ex.layer)
+
+
+def test_manager_out_of_capacity_defers_and_recovers(base_plan):
+    m, plan = base_plan
+    mgr = DynamicSparsityManager(
+        m, plan,
+        research_budget=SearchConfig(max_seconds=2, max_structures=2),
+        research_deadline_s=8.0)
+    try:
+        r = int(np.asarray(m.rows)[0])
+        taken = {(int(rr), int(cc))
+                 for rr, cc in zip(np.asarray(m.rows), np.asarray(m.cols))}
+        cols = [c for c in range(m.n_cols) if (r, c) not in taken]
+        d = PatternDelta(
+            m.n_rows, m.n_cols,
+            add_rows=np.full(len(cols), r, np.int32),
+            add_cols=np.array(cols, np.int32),
+            add_vals=np.ones(len(cols), np.float32),
+            drop_rows=np.zeros(0, np.int32), drop_cols=np.zeros(0, np.int32),
+            reval_rows=np.zeros(0, np.int32),
+            reval_cols=np.zeros(0, np.int32),
+            reval_vals=np.zeros(0, np.float32))
+        out = mgr.apply(d)
+        assert out["action"] == "research"
+        assert mgr.out_of_capacity == 1
+        assert mgr.stats()["serving_stale"]
+        # further mutations fold into the pending target
+        m2 = _mutate(mgr.target_matrix, seed=11, n_add=0)
+        out2 = mgr.apply(PatternDelta.from_matrices(mgr.target_matrix, m2))
+        assert out2["action"] == "deferred"
+        assert mgr.quiesce(timeout=120.0)
+    finally:
+        mgr.quiesce(timeout=120.0)
+    assert mgr.researches_landed >= 1
+    assert not mgr.stats()["serving_stale"]
+    assert same_pattern(mgr.matrix, m2)
+    _assert_oracle(m2, mgr.plan)
+
+
+# ------------------------- MoE routing churn (satellite 3) -----------------
+
+def test_moe_routing_churn_patches_in_place():
+    from repro.models.moe import routing_matrix
+    rng = np.random.default_rng(0)
+    n_tokens, n_experts, k = 64, 16, 2
+
+    def route(seed):
+        r = np.random.default_rng(seed)
+        idx = np.stack([r.permutation(n_experts)[:k]
+                        for _ in range(n_tokens)])
+        gates = r.random((n_tokens, k)).astype(np.float32) + 0.1
+        return idx, gates
+
+    idx0, g0 = route(1)
+    m0 = routing_matrix(idx0, g0, n_experts)
+    assert m0.nnz == n_tokens * k
+    plan = repro.compile(m0, repro.Target(), graph=capacity_graph())
+    # churn: ~25% of tokens re-route one expert slot, all gates move
+    idx1, g1 = idx0.copy(), g0 + 0.01
+    for t in rng.choice(n_tokens, n_tokens // 4, replace=False):
+        free = [e for e in range(n_experts) if e not in idx1[t]]
+        idx1[t, rng.integers(k)] = rng.choice(free)
+    m1 = routing_matrix(idx1, g1, n_experts)
+    delta = PatternDelta.from_matrices(m0, m1)
+    assert delta.n_added > 0 and delta.n_removed > 0
+    assert delta.n_added == delta.n_removed    # every token keeps k entries
+    upd = plan.update(delta)                   # re-route fits the k-lane
+    _assert_oracle(m1, upd)
+    x = _x(m1, seed=2)
+    np.testing.assert_allclose(
+        np.asarray(upd(x), np.float64), m1.spmv_dense_oracle(x),
+        atol=1e-5 * (np.abs(m1.spmv_dense_oracle(x)).max() + 1e-30), rtol=0)
+
+
+# ------------------------- train/ pruning loop -----------------------------
+
+def test_run_pruning_loop():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((64, 64)).astype(np.float32)
+    rep = run_pruning_loop(w, density=0.15, n_steps=4, lr=0.005, seed=0)
+    assert rep.steps == 4
+    assert rep.updates_applied >= 1
+    assert rep.oracle_max_rel_err < 1e-4
+    assert not rep.manager.research_active()
+
+
+# ------------------------- property test (hypothesis) ----------------------
+#
+# The dyn analogue of test_property.py's central invariant: for ANY
+# in-capacity delta, patching the plan in place is indistinguishable —
+# bit-for-bit — from compiling the mutated matrix from scratch with the
+# same design. Deltas are drawn so adds land in rows that just lost an
+# entry (guaranteed lane slack), the rest of the delta is unconstrained.
+
+def _random_in_capacity_mutation(m, rng):
+    rows = np.asarray(m.rows)
+    cols = np.asarray(m.cols)
+    vals = np.array(m.vals, np.float32)
+    nnz = vals.size
+    n_rev = int(rng.integers(0, max(nnz // 4, 1)))
+    n_drop = int(rng.integers(1, max(nnz // 3, 2)))
+    rev = rng.choice(nnz, n_rev, replace=False)
+    vals[rev] = rng.standard_normal(n_rev).astype(np.float32) + 0.25
+    drop = rng.choice(nnz, n_drop, replace=False)
+    keep = np.ones(nnz, bool)
+    keep[drop] = False
+    taken = {(int(r), int(c)) for r, c in zip(rows, cols)}
+    add_r, add_c, add_v = [], [], []
+    for i in drop[:int(rng.integers(0, n_drop + 1))]:
+        r = int(rows[i])
+        c = int(rng.integers(0, m.n_cols))
+        if (r, c) not in taken:
+            taken.add((r, c))
+            add_r.append(r)
+            add_c.append(c)
+            add_v.append(float(rng.standard_normal()) + 0.25)
+    return SparseMatrix(
+        m.n_rows, m.n_cols,
+        np.concatenate([rows[keep], np.array(add_r, np.int32)]),
+        np.concatenate([cols[keep], np.array(add_c, np.int32)]),
+        np.concatenate([vals[keep],
+                        np.array(add_v, np.float32)])).canonical()
+
+
+def test_property_update_bitexact_vs_fresh(base_plan):
+    pytest.importorskip(
+        "hypothesis",
+        reason="optional test extra (pip install 'repro[test]'): property "
+               "tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+    m, plan = base_plan
+    x = _x(m)
+
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def inner(seed):
+        rng = np.random.default_rng(seed)
+        m1 = _random_in_capacity_mutation(m, rng)
+        delta = PatternDelta.from_matrices(m, m1)
+        if not check_capacity(plan, delta):   # rare: duplicate-col adds
+            return
+        upd = plan.update(delta)
+        fresh = repro.compile(m1, repro.Target(), graph=capacity_graph())
+        np.testing.assert_array_equal(np.asarray(upd(x)),
+                                      np.asarray(fresh(x)))
+        assert (jax.tree_util.tree_structure(upd) ==
+                jax.tree_util.tree_structure(plan))
+
+    inner()
+
+
+# ------------------------- drift policy ------------------------------------
+
+def test_drift_policy_thresholds():
+    m = _base_matrix()
+    s = pattern_stats(m)
+    pol = DriftPolicy()
+    assert not pol.assess(s, s)
+    shrunk = dataclasses.replace  # noqa: F841  (documentation hint)
+    s2 = dict(s, nnz=int(s["nnz"] * 0.6), mean=s["mean"] * 0.6)
+    rep = pol.assess(s, s2)
+    assert rep.drifted and rep.reasons
