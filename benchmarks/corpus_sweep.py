@@ -1,0 +1,200 @@
+"""Fleet amortization proof: warm store + learned model vs full search.
+
+The tentpole gate for ``repro.corpus``. Flow:
+
+1. **Sweep** a training corpus (``repro.corpus.datasets.synthetic_corpus``)
+   with budgeted compiles into a fresh ``PlanStore`` — sidecars + sweep
+   records accumulate.
+2. **Train** the :class:`repro.corpus.model.CorpusModel` from the store
+   and save it next to it (exactly what ``repro-compile
+   --train-from-store`` does).
+3. **Held-out evaluation** (``holdout_corpus`` — different sizes AND
+   seeds, no store-key collisions): for each matrix, compile once from
+   scratch under the full budget, and once with ``strategy="portfolio"``
+   against the warm store under a small ``deadline_s``. Time both plans'
+   SpMV with the shared ``time_fn`` loop and verify both against the
+   dense oracle.
+
+Gate (written to ``BENCH_corpus.json``): geometric-mean throughput of
+the portfolio plans >= 90% of full-search, at >= 10x lower aggregate
+compile wall-clock. Exit 1 on gate/correctness failure, 3 on the smoke
+wall-clock guard. Synthetic matrices only — no network, CI-safe.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+try:                      # runnable as module (-m benchmarks.corpus_sweep)
+    from .common import SCALE, emit, gflops, time_fn
+except ImportError:       # ... or as a plain script from the repo root
+    from common import SCALE, emit, gflops, time_fn
+
+SMOKE_WALL_SECONDS = 300.0   # --smoke guard: CI fails loudly on a hang
+GFLOPS_RATIO_GATE = 0.90
+SPEEDUP_GATE = 10.0
+
+
+def budgets(smoke: bool):
+    """(sweep budget, full-search budget, portfolio deadline seconds)."""
+    from repro.core.search import SearchConfig
+    if smoke:
+        sweep = SearchConfig(max_seconds=6, max_structures=4,
+                             coarse_samples=2, fine_eval_budget=2,
+                             timing_repeats=1, seed=0)
+        full = SearchConfig(max_seconds=25, max_structures=10,
+                            coarse_samples=4, fine_top_structures=3,
+                            fine_eval_budget=6, timing_repeats=2, seed=0)
+        return sweep, full, 1.5
+    sweep = SearchConfig(max_seconds=20, max_structures=8, coarse_samples=3,
+                         fine_eval_budget=4, timing_repeats=2, seed=0)
+    full = SearchConfig(max_seconds=90, max_structures=16, coarse_samples=6,
+                        fine_eval_budget=8, timing_repeats=3, seed=0)
+    return sweep, full, 3.0
+
+
+def _oracle_ok(m, plan) -> bool:
+    x = np.random.default_rng(0).standard_normal(m.n_cols).astype(np.float32)
+    y = np.asarray(plan(x))
+    ref = m.spmv_dense_oracle(x)
+    scale = np.abs(ref).max() + 1e-30
+    return bool(np.abs(y - ref).max() / scale <= 1e-4)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny corpus + wall-clock guard (CI)")
+    ap.add_argument("--store-dir", default=None,
+                    help="PlanStore directory to fill (kept afterwards; "
+                         "default: a fresh temp dir). CI reuses it for the "
+                         "repro-compile --train-from-store smoke.")
+    ap.add_argument("--out", default=None,
+                    help="output json (default: <repo>/BENCH_corpus.json)")
+    args = ap.parse_args(argv)
+
+    from repro.api import PlanStore, compile as repro_compile
+    from repro.corpus.datasets import holdout_corpus, synthetic_corpus
+    from repro.corpus.model import default_model_path, train_from_store
+    from repro.corpus.portfolio import PortfolioStrategy
+    from repro.corpus.sweep import run_sweep
+
+    t_start = time.time()
+    scale = "smoke" if args.smoke else SCALE
+    corpus_scale = "smoke" if args.smoke else (
+        "small" if SCALE == "quick" else "medium")
+    sweep_budget, full_budget, deadline = budgets(args.smoke)
+    store_dir = args.store_dir or tempfile.mkdtemp(prefix="corpus-store-")
+    store = PlanStore(store_dir)
+
+    # 1. sweep the training corpus into the store
+    train_entries = synthetic_corpus(corpus_scale)
+    t0 = time.perf_counter()
+    recs = run_sweep(train_entries, store, budget=sweep_budget,
+                     progress=lambda s: print(f"  sweep {s}", flush=True))
+    sweep_wall = time.perf_counter() - t0
+    errors = [r.name for r in recs if r.error]
+    emit("corpus.sweep", sweep_wall * 1e6,
+         f"{len(recs)}_matrices_{len(errors)}_errors")
+
+    # 2. train + save the corpus model
+    t0 = time.perf_counter()
+    model = train_from_store(store_dir)
+    model.save(default_model_path(store_dir))
+    train_wall = time.perf_counter() - t0
+    emit("corpus.train", train_wall * 1e6,
+         f"{model.n_train}_rows_{len(model.labels)}_labels")
+
+    # 3. held-out: full search from scratch vs portfolio over the warm store
+    per_matrix = {}
+    failures = 0
+    for entry in holdout_corpus(corpus_scale):
+        m = entry.build()
+        t0 = time.perf_counter()
+        plan_full = repro_compile(m, budget=full_budget)
+        full_wall = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        plan_warm = repro_compile(
+            m, budget=full_budget, store=store, deadline_s=deadline,
+            strategy=PortfolioStrategy())
+        warm_wall = time.perf_counter() - t0
+        if not (_oracle_ok(m, plan_full) and _oracle_ok(m, plan_warm)):
+            emit(f"corpus.heldout.{entry.name}", 0.0, "WRONG_RESULT")
+            failures += 1
+            continue
+        s_full = time_fn(plan_full, np.random.default_rng(1)
+                         .standard_normal(m.n_cols).astype(np.float32))
+        s_warm = time_fn(plan_warm, np.random.default_rng(1)
+                         .standard_normal(m.n_cols).astype(np.float32))
+        ratio = s_full / s_warm     # >1 means the warm plan is faster
+        res = plan_warm.search_result
+        per_matrix[entry.name] = {
+            "full_wall_s": full_wall, "warm_wall_s": warm_wall,
+            "full_gflops": gflops(m.nnz, s_full),
+            "warm_gflops": gflops(m.nnz, s_warm),
+            "gflops_ratio": ratio,
+            "compile_speedup_x": full_wall / warm_wall,
+            "warm_evaluations": (res.n_evaluations if res else 0),
+        }
+        emit(f"corpus.heldout.{entry.name}", warm_wall * 1e6,
+             f"ratio{ratio:.2f}_speedup{full_wall / warm_wall:.1f}x")
+
+    if per_matrix:
+        ratios = [v["gflops_ratio"] for v in per_matrix.values()]
+        gm_ratio = math.exp(sum(math.log(max(r, 1e-9)) for r in ratios)
+                            / len(ratios))
+        sum_full = sum(v["full_wall_s"] for v in per_matrix.values())
+        sum_warm = sum(v["warm_wall_s"] for v in per_matrix.values())
+        speedup = sum_full / sum_warm
+    else:
+        gm_ratio, speedup = 0.0, 0.0
+    gate_pass = (failures == 0 and gm_ratio >= GFLOPS_RATIO_GATE
+                 and speedup >= SPEEDUP_GATE)
+
+    out_path = Path(args.out) if args.out else (
+        Path(__file__).resolve().parent.parent / "BENCH_corpus.json")
+    payload = {
+        "scale": scale,
+        "n_train": len(train_entries),
+        "n_heldout": len(per_matrix),
+        "sweep_wall_s": sweep_wall,
+        "sweep_errors": errors,
+        "train_rows": model.n_train,
+        "model_labels": len(model.labels),
+        "model_log_mae": model.mad,
+        "store_dir": str(store_dir),
+        "per_matrix": per_matrix,
+        "gflops_ratio": gm_ratio,
+        "compile_speedup_x": speedup,
+        "gflops_ratio_gate": GFLOPS_RATIO_GATE,
+        "speedup_gate": SPEEDUP_GATE,
+        "gate_pass": gate_pass,
+    }
+    out_path.write_text(json.dumps(payload, indent=2))
+    emit("corpus.gate", (time.time() - t_start) * 1e6,
+         f"ratio{gm_ratio:.3f}_speedup{speedup:.1f}x_"
+         + ("PASS" if gate_pass else "FAIL"))
+    print(f"wrote {out_path}")
+
+    if args.smoke and time.time() - t_start > SMOKE_WALL_SECONDS:
+        print(f"SMOKE GUARD: {time.time() - t_start:.0f}s "
+              f"> {SMOKE_WALL_SECONDS:.0f}s")
+        return 3
+    if not gate_pass:
+        print(f"GATE FAIL: gflops_ratio {gm_ratio:.3f} "
+              f"(need >= {GFLOPS_RATIO_GATE}), compile speedup "
+              f"{speedup:.1f}x (need >= {SPEEDUP_GATE}x), "
+              f"{failures} correctness failures")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,7 +24,10 @@ _HEADLINES = ("n_speedup_ok", "n_devices", "dedup_ok_at_4plus_shards",
               "rejected_swaps", "n_failed_candidates",
               "store_entries_quarantined", "update_speedup_x",
               "updates_in_place", "drift_events", "researches_landed",
-              "oracle_max_rel_err")
+              "oracle_max_rel_err",
+              # corpus sweep / learned-strategy gate (BENCH_corpus.json)
+              "gflops_ratio", "compile_speedup_x", "gate_pass",
+              "n_train", "n_heldout", "train_rows")
 
 
 def summarize(bench_dir: Path) -> dict:

@@ -50,6 +50,7 @@ _EXPORTS = {
     "AnnealStrategy": "repro.design.strategies",
     "GridStrategy": "repro.design.strategies",
     "CostModelGuidedStrategy": "repro.design.strategies",
+    "LearnedStrategy": "repro.design.strategies",
     "register_strategy": "repro.design.strategies",
     # dynamic sparsity (repro.dyn): patch-in-place plans + drift re-search
     "dyn": None,                        # submodule, imported lazily
@@ -57,6 +58,10 @@ _EXPORTS = {
     "DriftPolicy": "repro.dyn",
     "DynamicSparsityManager": "repro.dyn",
     "CapacityError": "repro.dyn",
+    # fleet corpus harness + learned/portfolio compilation (repro.corpus)
+    "corpus": None,                     # submodule, imported lazily
+    "CorpusModel": "repro.corpus.model",
+    "PortfolioStrategy": "repro.corpus.portfolio",
 }
 
 __all__ = sorted(_EXPORTS)

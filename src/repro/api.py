@@ -671,7 +671,10 @@ def compile(matrix: SparseMatrix, target: Optional[Target] = None,
       Graph (sharded targets apply it per shard).
     * ``strategy`` — the search policy walking the design space: a
       ``repro.design.SearchStrategy`` instance/class or a registered name
-      ("anneal" | "grid" | "cost_model"). None = ``AnnealStrategy``, the
+      ("anneal" | "grid" | "cost_model" | "learned" | "portfolio").
+      Store-aware strategies get ``bind_store(store)`` called before the
+      search, which is how "portfolio" reaches reuse suggestions and the
+      trained corpus model. None = ``AnnealStrategy``, the
       historical SA walk (behavioral parity). Sharded targets pass the
       strategy to every per-shard search (no-op with ``budget=None``,
       where shards take the search-free heuristic design).
@@ -696,6 +699,14 @@ def compile(matrix: SparseMatrix, target: Optional[Target] = None,
       ``search_gflops`` survives the round trip.
     """
     target = target or Target()
+    if strategy is not None:
+        # normalize once so store keys see the *bound* strategy: a
+        # store-aware strategy ("portfolio", "learned") keys on its model
+        # fingerprint, and get/put must agree on it
+        from repro.design.strategies import make_strategy
+        strategy = make_strategy(strategy)
+        if store is not None and hasattr(strategy, "bind_store"):
+            strategy.bind_store(store)
     if store is not None:
         hit = store.get(matrix, target, budget, graph, strategy)
         if hit is not None:
@@ -872,6 +883,13 @@ class PlanStore:
         self.cache_dir = Path(cache_dir)
         self.hits = 0
         self.misses = 0
+        # suggest() sidecar index: path -> ((mtime_ns, size), payload).
+        # payload is None for corrupt sidecars (negative cache). The whole
+        # index is revalidated only when the *directory* mtime moves —
+        # sidecars are written atomically (os.replace into the directory),
+        # so every add/replace/remove bumps it.
+        self._sidecars: dict[Path, tuple[tuple[int, int], Optional[dict]]] = {}
+        self._sidecar_dir_stamp: Optional[int] = None
 
     @staticmethod
     def key(matrix: SparseMatrix, target: Target, budget=None,
@@ -924,7 +942,9 @@ class PlanStore:
         plan.save(self._path(key))
         graph_json = getattr(plan, "graph_json", None)
         if graph_json is not None:
+            from repro.corpus.features import matrix_features
             sidecar = {"stats": _matrix_stats(matrix),
+                       "features": matrix_features(matrix).tolist(),
                        "graph": json.loads(graph_json),
                        "gflops": getattr(plan, "search_gflops", None)}
             _atomic_write_text(self.cache_dir / f"{key}.stats.json",
@@ -981,27 +1001,79 @@ class PlanStore:
                                         strategy),
                          mesh=target.mesh)
 
-    def suggest(self, matrix: SparseMatrix,
-                max_distance: float = 1.0) -> Optional[OperatorGraph]:
+    def _refresh_sidecars(self) -> None:
+        """Revalidate the in-memory sidecar index, O(changed files).
+
+        Cheap path: one ``stat`` of the directory; if its mtime_ns is
+        unchanged since the last suggest(), nothing on disk was atomically
+        added/replaced/removed and the index is served as-is. Otherwise
+        files are re-statted and only entries whose (mtime_ns, size) stamp
+        moved are re-parsed; corrupt files are negative-cached so a bad
+        sidecar is parsed (and skipped) once, not per call."""
+        try:
+            dir_stamp = self.cache_dir.stat().st_mtime_ns
+        except OSError:
+            self._sidecars.clear()
+            self._sidecar_dir_stamp = None
+            return
+        if dir_stamp == self._sidecar_dir_stamp:
+            return
+        seen = set()
+        for path in self.cache_dir.glob("*.stats.json"):
+            try:
+                st = path.stat()
+            except OSError:
+                continue   # removed between glob and stat
+            seen.add(path)
+            stamp = (st.st_mtime_ns, st.st_size)
+            cached = self._sidecars.get(path)
+            if cached is not None and cached[0] == stamp:
+                continue
+            try:
+                payload = json.loads(path.read_text())
+                payload["stats"][0]   # shape check: stats must index
+                payload["graph"]
+            except (OSError, ValueError, KeyError, IndexError, TypeError):
+                payload = None        # negative cache: skip until it changes
+            self._sidecars[path] = (stamp, payload)
+        for path in list(self._sidecars):
+            if path not in seen:
+                del self._sidecars[path]
+        self._sidecar_dir_stamp = dir_stamp
+
+    def suggest(self, matrix: SparseMatrix, max_distance: float = 1.0,
+                with_distance: bool = False):
         """Winning graph of the statistically nearest stored plan.
 
         Returns None when the store is empty or nothing is within
-        ``max_distance`` in normalized statistics space. The returned
-        graph warm-starts any strategy (``repro.compile(...,
-        warm_start=[g])``); it is *timed like any other candidate*, so a
-        bad suggestion costs one evaluation, never correctness."""
+        ``max_distance`` in normalized statistics space (a candidate at
+        exactly ``max_distance`` is accepted). The returned graph
+        warm-starts any strategy (``repro.compile(..., warm_start=[g])``);
+        it is *timed like any other candidate*, so a bad suggestion costs
+        one evaluation, never correctness.
+
+        With ``with_distance=True`` returns ``(graph_or_None, distance)``
+        (``math.inf`` when nothing matched) — the portfolio strategy
+        gates its refinement phase on this confidence signal.
+
+        Sidecars are indexed in memory and revalidated by directory
+        mtime, so corpus-scale stores (hundreds of entries) pay parsing
+        only for files that actually changed."""
         if not self.cache_dir.is_dir():
-            return None
+            return (None, math.inf) if with_distance else None
+        self._refresh_sidecars()
         want = _matrix_stats(matrix)
         best_d, best_graph = math.inf, None
-        for sidecar in sorted(self.cache_dir.glob("*.stats.json")):
-            try:
-                payload = json.loads(sidecar.read_text())
-                d = _stats_distance(want, payload["stats"])
-                if d < best_d:
-                    best_d, best_graph = d, payload["graph"]
-            except (OSError, ValueError, KeyError, IndexError):
+        for _stamp, payload in self._sidecars.values():
+            if payload is None:
                 continue
+            try:
+                d = _stats_distance(want, payload["stats"])
+            except (ValueError, KeyError, IndexError, TypeError):
+                continue
+            if d < best_d:
+                best_d, best_graph = d, payload["graph"]
         if best_graph is None or best_d > max_distance:
-            return None
-        return _graph_from_jsonable(best_graph)
+            return (None, math.inf) if with_distance else None
+        graph = _graph_from_jsonable(best_graph)
+        return (graph, best_d) if with_distance else graph

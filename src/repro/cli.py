@@ -6,6 +6,13 @@ The console-script face of the one compile API::
     repro-compile --demo --no-search --batch 8 --out demo.plan.npz
     repro-compile --demo --strategy grid --seconds 10 --out demo.plan.npz
 
+Fleet workflows (docs/API.md "Fleet compilation & learned strategy")::
+
+    repro-compile --demo --out d.plan.npz --store plans/   # warm-started
+    repro-compile --train-from-store --store plans/        # fit the model
+    repro-compile --demo --out d.plan.npz --store plans/ \
+                  --strategy portfolio --deadline 2        # fast path
+
 Compiles the matrix (AlphaSparse search, or the heuristic design with
 ``--no-search``), saves the plan, reloads it, verifies the loaded plan is
 bit-identical to the live one and correct against the float64 dense
@@ -23,29 +30,70 @@ def _build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="repro-compile",
         description="Compile a sparse matrix to a saved SpmvPlan artifact")
-    src = ap.add_mutually_exclusive_group(required=True)
+    src = ap.add_mutually_exclusive_group()
     src.add_argument("--mtx", help="MatrixMarket input file")
     src.add_argument("--demo", action="store_true",
                      help="use a generated scale-free demo matrix")
-    ap.add_argument("--out", required=True, help="output .plan.npz path")
+    ap.add_argument("--out", help="output .plan.npz path")
     ap.add_argument("--backend", default="jax", choices=["jax", "pallas"])
     ap.add_argument("--batch", type=int, default=1,
                     help="right-hand sides the plan is tuned for")
     ap.add_argument("--seconds", type=float, default=30.0,
                     help="search budget in seconds")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="hard wall-clock cap for the whole compile "
+                         "(repro.compile deadline_s)")
     ap.add_argument("--no-search", action="store_true",
                     help="skip the search; use the heuristic design")
     ap.add_argument("--strategy", default="anneal",
                     help="search policy walking the design space: a name "
                          "registered with repro.design.register_strategy "
-                         "(shipped: anneal | grid | cost_model)")
+                         "(shipped: anneal | grid | cost_model | learned "
+                         "| portfolio)")
+    ap.add_argument("--store", metavar="DIR", default=None,
+                    help="PlanStore directory: exact hits are reloaded, "
+                         "near matches warm-start the search, new plans "
+                         "(and their stats sidecars) are saved")
+    ap.add_argument("--train-from-store", action="store_true",
+                    help="train the corpus model from the --store "
+                         "directory's sidecars + sweep records, save it "
+                         "next to the store, and exit (no compile)")
     ap.add_argument("--repeats", type=int, default=5,
                     help="timing repeats for the benchmark")
     return ap
 
 
+def _train_from_store(store_dir: str) -> int:
+    from repro.corpus.model import default_model_path, train_from_store
+
+    try:
+        model = train_from_store(store_dir)
+    except ValueError as e:
+        print(f"FAIL: {e}")
+        return 1
+    path = model.save(default_model_path(store_dir))
+    print(f"trained corpus model: {len(model.labels)} structure labels, "
+          f"{len(model.exemplar_labels)} exemplars, "
+          f"{model.n_train} sweep rows"
+          + (f", log-MAE {model.mad:.3f}" if model.mad is not None
+             else " (nearest-exemplar mode)"))
+    print(f"saved -> {path} (fingerprint {model.fingerprint()})")
+    return 0
+
+
 def main(argv=None) -> int:
-    args = _build_parser().parse_args(argv)
+    parser = _build_parser()
+    args = parser.parse_args(argv)
+
+    if args.train_from_store:
+        if not args.store:
+            parser.error("--train-from-store requires --store DIR")
+        return _train_from_store(args.store)
+    if not (args.mtx or args.demo):
+        parser.error("one of --mtx / --demo is required (or "
+                     "--train-from-store)")
+    if not args.out:
+        parser.error("--out is required when compiling")
 
     import numpy as np
     import repro
@@ -59,19 +107,29 @@ def main(argv=None) -> int:
         m = read_matrix_market(args.mtx)
         print(f"loaded {args.mtx}: {m.n_rows}x{m.n_cols} nnz={m.nnz}")
 
+    store = repro.PlanStore(args.store) if args.store else None
     target = repro.Target(backend=args.backend, batch_size=args.batch)
     t0 = time.time()
     if args.no_search:
         from repro.dist.spmv import default_shard_graph
-        plan = repro.compile(m, target, graph=default_shard_graph(m))
+        plan = repro.compile(m, target, graph=default_shard_graph(m),
+                             store=store)
         print(f"compiled (heuristic design) in {time.time() - t0:.1f}s")
     else:
         plan = repro.compile(m, target, budget=args.seconds,
-                             strategy=args.strategy)
+                             strategy=args.strategy, store=store,
+                             deadline_s=args.deadline)
         res = plan.search_result
-        print(f"searched {res.n_evaluations} designs in "
-              f"{res.wall_seconds:.1f}s ({res.strategy_name} strategy) "
-              f"-> {plan.graph.label()}")
+        if res is None:   # exact PlanStore hit: loaded, not searched
+            print(f"plan store hit in {time.time() - t0:.1f}s "
+                  f"-> {plan.graph.label()}")
+        else:
+            print(f"searched {res.n_evaluations} designs in "
+                  f"{res.wall_seconds:.1f}s ({res.strategy_name} strategy) "
+                  f"-> {plan.graph.label()}")
+    if store is not None:
+        print(f"plan store {args.store}: {store.hits} hits, "
+              f"{store.misses} misses")
 
     plan.save(args.out)
     loaded = repro.SpmvPlan.load(args.out)

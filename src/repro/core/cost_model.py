@@ -18,7 +18,7 @@ import dataclasses
 import numpy as np
 
 __all__ = ["GBTRegressor", "program_features", "fit_cost_model",
-           "FEATURE_NAMES"]
+           "FEATURE_NAMES", "gbt_to_arrays", "gbt_from_arrays"]
 
 
 # ----------------------------- tree ensemble ------------------------------
@@ -129,6 +129,47 @@ class GBTRegressor:
         """Mean absolute deviation in relative terms (paper reports 5%)."""
         p = self.predict(X)
         return float(np.mean(np.abs(p - y) / np.maximum(np.abs(y), 1e-12)))
+
+
+def gbt_to_arrays(model: GBTRegressor) -> dict[str, np.ndarray]:
+    """Flatten a fitted ensemble to plain arrays (npz-serialisable).
+
+    Node tables of all trees are concatenated; ``gbt_offsets[t]`` is the
+    first row of tree ``t``. Used by ``repro.corpus`` to persist the
+    learned corpus model next to a PlanStore."""
+    rows = []
+    offsets = [0]
+    for t in model.trees:
+        for n in t.nodes:
+            rows.append((n.feature, n.threshold, n.left, n.right, n.value))
+        offsets.append(len(rows))
+    nodes = (np.array(rows, np.float64) if rows
+             else np.zeros((0, 5), np.float64))
+    return {
+        "gbt_nodes": nodes,
+        "gbt_offsets": np.array(offsets, np.int64),
+        "gbt_scalars": np.array([model.base, model.lr, model.n_trees,
+                                 model.max_depth, model.min_leaf], np.float64),
+    }
+
+
+def gbt_from_arrays(arrays) -> GBTRegressor:
+    """Inverse of :func:`gbt_to_arrays`; predictions are bit-identical."""
+    base, lr, n_trees, max_depth, min_leaf = (
+        np.asarray(arrays["gbt_scalars"], np.float64).tolist())
+    model = GBTRegressor(n_trees=int(n_trees), lr=lr,
+                         max_depth=int(max_depth), min_leaf=int(min_leaf))
+    model.base = float(base)
+    nodes = np.asarray(arrays["gbt_nodes"], np.float64)
+    offsets = np.asarray(arrays["gbt_offsets"], np.int64)
+    model.trees = []
+    for t in range(offsets.size - 1):
+        tree = _Tree(model.max_depth, model.min_leaf)
+        for f, thr, left, right, value in nodes[offsets[t]:offsets[t + 1]]:
+            tree.nodes.append(_Node(int(f), float(thr), int(left),
+                                    int(right), float(value)))
+        model.trees.append(tree)
+    return model
 
 
 def fit_cost_model(feature_rows, seconds) -> tuple["GBTRegressor", float]:

@@ -1,0 +1,57 @@
+"""``repro.corpus``: fleet-scale corpus harness + learned compilation.
+
+The paper validates over 843 SuiteSparse matrices; a fleet compiles
+millions. This package amortizes search cost across a *corpus*:
+
+* **datasets** — deterministic synthetic sweeps (size x density x skew
+  over the benchmark families) plus an offline-graceful SuiteSparse
+  loader;
+* **sweep** — budgeted ``repro.compile`` runs over a corpus slice,
+  filling a shared ``PlanStore`` and appending per-matrix training
+  records;
+* **features / model** — fixed sparsity feature vectors and the
+  :class:`CorpusModel` (GBT label ranking + nearest-exemplar parameter
+  transfer) trained from store sidecars + sweep records, saved as npz
+  next to the store;
+* **portfolio** — the ``"portfolio"`` SearchStrategy racing store reuse
+  -> learned predictions -> anneal refinement under one
+  ``compile(deadline_s=...)`` budget.
+
+Lazy exports (PEP 562), same contract as ``repro`` itself: importing
+``repro.corpus`` pulls in neither jax nor numpy.
+"""
+
+_EXPORTS = {
+    "CorpusEntry": "repro.corpus.datasets",
+    "CORPUS_FAMILIES": "repro.corpus.datasets",
+    "register_family": "repro.corpus.datasets",
+    "synthetic_corpus": "repro.corpus.datasets",
+    "holdout_corpus": "repro.corpus.datasets",
+    "suitesparse_entry": "repro.corpus.datasets",
+    "load_suitesparse": "repro.corpus.datasets",
+    "CORPUS_FEATURE_NAMES": "repro.corpus.features",
+    "matrix_features": "repro.corpus.features",
+    "SweepRecord": "repro.corpus.sweep",
+    "run_sweep": "repro.corpus.sweep",
+    "load_records": "repro.corpus.sweep",
+    "training_rows": "repro.corpus.sweep",
+    "CorpusModel": "repro.corpus.model",
+    "train_from_store": "repro.corpus.model",
+    "default_model_path": "repro.corpus.model",
+    "PortfolioStrategy": "repro.corpus.portfolio",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(
+            f"module 'repro.corpus' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,172 @@
+"""Budgeted corpus sweeps: fill a PlanStore, emit training records.
+
+``run_sweep`` compiles every corpus entry through ``repro.compile(...,
+store=...)`` under one budget, so each matrix leaves two artifacts
+behind:
+
+* the stored plan + ``*.stats.json`` sidecar (PlanStore — exemplars for
+  the learned model and ``suggest()`` reuse), and
+* a :class:`SweepRecord` line in ``sweep_records.jsonl`` next to the
+  store: features, per-structure best timings, the winning graph,
+  failure taxonomy — the relative-slowdown supervision the GBT ranks
+  structures with.
+
+Records are append-only JSONL so repeated sweeps (new scales, more
+seeds) accumulate into one growing training set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Iterable, Optional
+
+from repro.corpus.datasets import CorpusEntry
+from repro.corpus.model import PSEUDO_LABELS
+
+__all__ = ["SweepRecord", "run_sweep", "load_records", "training_rows",
+           "RECORDS_FILENAME"]
+
+RECORDS_FILENAME = "sweep_records.jsonl"
+
+
+@dataclasses.dataclass
+class SweepRecord:
+    """Everything the trainer needs about one swept matrix."""
+    name: str
+    n_rows: int
+    n_cols: int
+    nnz: int
+    features: list[float]
+    label_times: dict[str, float]      # structure label -> best seconds
+    label: Optional[str]               # winning structure label
+    graph: Optional[dict]              # winning graph, jsonable
+    gflops: Optional[float]
+    wall_seconds: float
+    n_evaluations: int
+    failure_counts: dict[str, int]
+    error: Optional[str] = None        # set when the compile itself died
+    cached: bool = False               # store hit: no fresh timings
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+    @classmethod
+    def from_json(cls, line: str) -> "SweepRecord":
+        d = json.loads(line)
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+def run_sweep(entries: Iterable[CorpusEntry], store, budget=None,
+              target=None, strategy=None, deadline_s=None,
+              records_path=None, progress=None) -> list[SweepRecord]:
+    """Compile each entry with the shared ``store``; append records.
+
+    Unbuildable entries (offline SuiteSparse) are skipped; a compile
+    failure becomes a record with ``error`` set rather than aborting the
+    sweep — fleet harnesses must survive individual bad matrices."""
+    from repro.api import compile as _compile
+    from repro.corpus.features import matrix_features
+
+    path = (Path(records_path) if records_path
+            else Path(store.cache_dir) / RECORDS_FILENAME)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    out: list[SweepRecord] = []
+    for entry in entries:
+        m = entry.build()
+        if m is None:
+            if progress:
+                progress(f"{entry.name}: unavailable, skipped")
+            continue
+        feats = matrix_features(m).tolist()
+        t0 = time.perf_counter()
+        try:
+            plan = _compile(m, target, budget, strategy=strategy,
+                            deadline_s=deadline_s, store=store)
+            err = None
+        except Exception as e:   # keep sweeping: record the casualty
+            plan, err = None, repr(e)
+        wall = time.perf_counter() - t0
+        rec = _record_for(entry, m, feats, plan, err, wall)
+        out.append(rec)
+        with open(path, "a") as f:
+            f.write(rec.to_json() + "\n")
+        if progress:
+            progress(f"{entry.name}: "
+                     + (f"error {err}" if err else
+                        f"{rec.gflops or 0.0:.2f} gflops in {wall:.1f}s"
+                        + (" (store hit)" if rec.cached else "")))
+    return out
+
+
+def _record_for(entry, m, feats, plan, err, wall) -> SweepRecord:
+    from repro.core.search import _graph_to_jsonable
+    from repro.corpus.model import structure_label_of
+
+    label_times: dict[str, float] = {}
+    label = graph_json = gflops = None
+    n_evals = 0
+    failures: dict[str, int] = {}
+    cached = False
+    if plan is not None:
+        res = getattr(plan, "search_result", None)
+        gflops = getattr(plan, "search_gflops", None)
+        if res is not None:
+            n_evals = res.n_evaluations
+            failures = dict(res.failure_counts)
+            for r in res.records:
+                if r.structure in PSEUDO_LABELS:
+                    continue
+                prev = label_times.get(r.structure)
+                if prev is None or r.seconds < prev:
+                    label_times[r.structure] = float(r.seconds)
+            graph_json = _graph_to_jsonable(res.best_graph)
+            label = structure_label_of(res.best_graph)
+        else:
+            cached = True   # exact store hit: plan only, no fresh timings
+            gj = getattr(plan, "graph_json", None)
+            if gj:
+                graph_json = json.loads(gj)
+    return SweepRecord(name=entry.name, n_rows=m.n_rows, n_cols=m.n_cols,
+                       nnz=m.nnz, features=feats, label_times=label_times,
+                       label=label, graph=graph_json, gflops=gflops,
+                       wall_seconds=wall, n_evaluations=n_evals,
+                       failure_counts=failures, error=err, cached=cached)
+
+
+def load_records(path) -> list[SweepRecord]:
+    """Read a ``sweep_records.jsonl``; bad lines are skipped, not fatal."""
+    out = []
+    p = Path(path)
+    if not p.is_file():
+        return out
+    for line in p.read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            out.append(SweepRecord.from_json(line))
+        except (ValueError, TypeError, KeyError):
+            continue
+    return out
+
+
+def training_rows(records: Iterable[SweepRecord]
+                  ) -> list[tuple[list[float], str, float]]:
+    """Flatten records into GBT rows: (features, label, relative slowdown).
+
+    Slowdown is each structure's best time over the matrix's overall best
+    — 1.0 for the winner, >1 for the rest — so the target is comparable
+    across matrices of wildly different absolute cost."""
+    rows = []
+    for rec in records:
+        if rec.error or not rec.label_times:
+            continue
+        best = min(rec.label_times.values())
+        if not (best > 0):
+            continue
+        for label, seconds in rec.label_times.items():
+            rows.append((rec.features, label, seconds / best))
+    return rows

@@ -45,6 +45,7 @@ _EXPORTS = {
     "AnnealStrategy": "repro.design.strategies",
     "GridStrategy": "repro.design.strategies",
     "CostModelGuidedStrategy": "repro.design.strategies",
+    "LearnedStrategy": "repro.design.strategies",
     "register_strategy": "repro.design.strategies",
     "make_strategy": "repro.design.strategies",
     "strategy_names": "repro.design.strategies",

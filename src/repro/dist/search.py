@@ -21,6 +21,8 @@ to every per-shard ``run_search``.
 from __future__ import annotations
 
 import dataclasses
+import os
+from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
 from repro.core.matrices import SparseMatrix
@@ -28,6 +30,7 @@ from repro.core.search import (ProgramCache, SearchConfig, SearchResult,
                                run_search)
 from repro.core.graph import run_graph
 from repro.core.kernel_builder import build_program
+from repro.design.strategies import SearchStrategy
 
 from .spmv import (RowShard, ShardedSpmvProgram, _axis_size,
                    build_sharded_spmv, default_shard_graph, partition_matrix)
@@ -56,6 +59,13 @@ class ShardedSearchConfig:
     # shards below this nnz skip the search and take the heuristic design
     # (a search on a near-empty shard is all compile overhead, no signal)
     min_nnz_for_search: int = 256
+    # per-shard searches share no state (each gets its own rng, design
+    # space and derived seed), so they run on a thread pool. None = one
+    # worker per searchable shard capped at the CPU count; 1 = sequential.
+    # Note: the per-candidate SIGALRM deadline is a no-op off the main
+    # thread, so hung-candidate protection inside pooled searches falls
+    # back to the wall-clock checks between candidates.
+    max_workers: Optional[int] = None
     backend: str = "jax"
     # interpret=True runs backend="pallas" kernels in interpret mode inside
     # the shard_map body (the CPU stand-in for the on-device Mosaic path)
@@ -100,30 +110,52 @@ def dist_search(m: SparseMatrix, mesh,
     cfg = config or ShardedSearchConfig()
     n_shards = _axis_size(mesh, cfg.axis_name)
     shards = partition_matrix(m, n_shards, mode=cfg.mode, balance=cfg.balance)
-    programs, reports = [], []
-    for s in shards:
-        if s.is_empty:
-            programs.append(None)
-            reports.append(ShardReport(s, False, None, None))
-            continue
-        if s.matrix.nnz >= cfg.min_nnz_for_search:
-            # per-shard seed: shard walks must diverge (seed + shard_id),
-            # not replay one walk n_shards times
-            scfg = dataclasses.replace(cfg.search,
-                                       seed=cfg.seed + cfg.search.seed
-                                       + s.index,
-                                       backend=cfg.backend)
-            res = run_search(s.matrix, scfg, cache=cache,
-                             strategy=cfg.strategy)
-            programs.append(res.best_program)
-            reports.append(ShardReport(s, True, res.best_graph.label(), res))
-        else:
-            g = default_shard_graph(s.matrix)
-            meta = run_graph(s.matrix, g)
-            programs.append(build_program(meta, backend=cfg.backend,
-                                          jit=False))
-            reports.append(ShardReport(s, False, g.label(), None))
+    n_searchable = sum(1 for s in shards
+                       if not s.is_empty
+                       and s.matrix.nnz >= cfg.min_nnz_for_search)
+    workers = cfg.max_workers
+    if workers is None:
+        workers = max(1, min(n_searchable, os.cpu_count() or 1))
+    if isinstance(cfg.strategy, SearchStrategy):
+        # a shared strategy *instance* is stateful across reset(); pooled
+        # shards would race on it — fall back to the sequential path
+        # (pass a name/class to parallelize)
+        workers = 1
+    if workers > 1 and n_searchable > 1:
+        with ThreadPoolExecutor(max_workers=workers,
+                                thread_name_prefix="shard-search") as ex:
+            # ex.map preserves shard order: results are positionally
+            # identical to the sequential path
+            outs = list(ex.map(lambda s: _design_shard(s, cfg, cache),
+                               shards))
+    else:
+        outs = [_design_shard(s, cfg, cache) for s in shards]
+    programs = [p for p, _ in outs]
+    reports = [r for _, r in outs]
     program = build_sharded_spmv(shards, programs, mesh, cfg.axis_name,
                                  backend=cfg.backend,
                                  interpret=cfg.interpret)
     return ShardedSearchResult(program=program, reports=reports)
+
+
+def _design_shard(s: RowShard, cfg: ShardedSearchConfig,
+                  cache: Optional[ProgramCache]):
+    """Design one shard: searched, heuristic, or empty. Shares nothing
+    mutable with other shards (thread-pool safe): the per-shard search
+    derives its own rng from ``seed + shard_id`` and builds its own
+    DesignSpace."""
+    if s.is_empty:
+        return None, ShardReport(s, False, None, None)
+    if s.matrix.nnz >= cfg.min_nnz_for_search:
+        # per-shard seed: shard walks must diverge (seed + shard_id),
+        # not replay one walk n_shards times
+        scfg = dataclasses.replace(cfg.search,
+                                   seed=cfg.seed + cfg.search.seed + s.index,
+                                   backend=cfg.backend)
+        res = run_search(s.matrix, scfg, cache=cache, strategy=cfg.strategy)
+        return res.best_program, ShardReport(s, True,
+                                             res.best_graph.label(), res)
+    g = default_shard_graph(s.matrix)
+    meta = run_graph(s.matrix, g)
+    prog = build_program(meta, backend=cfg.backend, jit=False)
+    return prog, ShardReport(s, False, g.label(), None)

@@ -126,6 +126,84 @@ def test_plan_store_roundtrip(small_uniform, tmp_path):
     assert p3.target.backend == "pallas"
 
 
+def test_plan_store_suggest_empty_and_boundary(small_uniform, tmp_path):
+    store = repro.PlanStore(tmp_path / "plans")
+    # empty store: None, and (None, inf) with the distance
+    assert store.suggest(small_uniform) is None
+    g, d = store.suggest(small_uniform, with_distance=True)
+    assert g is None and d == float("inf")
+    repro.compile(small_uniform, graph=default_shard_graph(small_uniform),
+                  store=store)
+    # the stored matrix sits at distance exactly 0 (stats round-trip
+    # exactly through JSON); max_distance is an inclusive boundary
+    g, d = store.suggest(small_uniform, max_distance=0.0, with_distance=True)
+    assert g is not None and d == 0.0
+    assert store.suggest(small_uniform, max_distance=0.0) is not None
+
+
+def test_plan_store_suggest_skips_corrupt_sidecar(small_uniform,
+                                                  small_regular, tmp_path):
+    from repro.api import _matrix_stats
+    store = repro.PlanStore(tmp_path / "plans")
+    repro.compile(small_uniform, graph=default_shard_graph(small_uniform),
+                  store=store)
+    repro.compile(small_regular, graph=default_shard_graph(small_regular),
+                  store=store)
+    inf = float("inf")
+    assert store.suggest(small_uniform, max_distance=inf) is not None
+    # corrupt the exact match in place. The sidecar index is per-instance
+    # (revalidated by directory mtime, which an in-place rewrite does not
+    # bump), so a FRESH store must skip it and fall back to the neighbour.
+    stats_u = _matrix_stats(small_uniform)
+    n_corrupted = 0
+    for p in (tmp_path / "plans").glob("*.stats.json"):
+        if json.loads(p.read_text())["stats"] == stats_u:
+            p.write_text("{ not json")
+            n_corrupted += 1
+    assert n_corrupted == 1
+    fresh = repro.PlanStore(tmp_path / "plans")
+    g, d = fresh.suggest(small_uniform, max_distance=inf, with_distance=True)
+    assert g is not None and 0.0 < d < inf
+    # corrupt everything: nothing left to suggest
+    for p in (tmp_path / "plans").glob("*.stats.json"):
+        p.write_text("not json at all")
+    assert repro.PlanStore(tmp_path / "plans").suggest(
+        small_uniform, max_distance=inf) is None
+
+
+def test_plan_store_suggest_index_tracks_new_entries(small_uniform,
+                                                     small_regular, tmp_path):
+    """Atomic sidecar writes bump the directory mtime, so the same
+    instance's index picks up entries stored after its first suggest()."""
+    store = repro.PlanStore(tmp_path / "plans")
+    repro.compile(small_regular, graph=default_shard_graph(small_regular),
+                  store=store)
+    _, d1 = store.suggest(small_uniform, max_distance=float("inf"),
+                          with_distance=True)
+    assert 0.0 < d1 < float("inf")
+    repro.compile(small_uniform, graph=default_shard_graph(small_uniform),
+                  store=store)
+    g2, d2 = store.suggest(small_uniform, with_distance=True)
+    assert g2 is not None and d2 == 0.0
+
+
+def test_plan_store_suggest_cross_strategy(small_uniform, tmp_path):
+    """Sidecars are strategy-agnostic: suggest() reads entries written by
+    a searched compile and a fixed-graph compile alike."""
+    from repro.core.search import SearchConfig
+    store = repro.PlanStore(tmp_path / "plans")
+    cfg = SearchConfig(max_seconds=20, max_structures=2, coarse_samples=1,
+                       fine_eval_budget=0, timing_repeats=1,
+                       use_cost_model=False, seed=3)
+    repro.compile(small_uniform, budget=cfg, strategy="grid", store=store)
+    repro.compile(small_uniform, graph=default_shard_graph(small_uniform),
+                  store=store)
+    assert store.misses == 2          # distinct keys, both stored
+    assert len(list((tmp_path / "plans").glob("*.stats.json"))) == 2
+    g, d = store.suggest(small_uniform, with_distance=True)
+    assert g is not None and d == 0.0
+
+
 # ------------------------------ sharded plans -------------------------------
 
 def _mesh1():

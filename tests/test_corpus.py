@@ -1,0 +1,199 @@
+"""repro.corpus subsystem: datasets registry, feature extraction, sweep
+harness, the learned CorpusModel, and the learned/portfolio strategies.
+
+The warm-store pipeline tests share one module-scoped fixture (a tiny
+swept PlanStore with a trained model saved next to it) so the expensive
+part — budgeted compiles — runs once.
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro.core.cost_model import GBTRegressor, gbt_from_arrays, gbt_to_arrays
+from repro.core.search import SearchConfig
+from repro.corpus.datasets import (CORPUS_FAMILIES, holdout_corpus,
+                                   register_family, synthetic_corpus)
+from repro.corpus.features import CORPUS_FEATURE_NAMES, matrix_features
+from repro.corpus.model import (CorpusModel, PSEUDO_LABELS,
+                                default_model_path, structure_label_of,
+                                train_from_store)
+from repro.corpus.sweep import (RECORDS_FILENAME, load_records, run_sweep,
+                                training_rows)
+
+# per-compile budget for the sweep fixture: coarse-only, no cost model,
+# so every structure walk is timing-independent and seconds-cheap
+_TINY = SearchConfig(max_seconds=15, max_structures=2, coarse_samples=1,
+                     fine_eval_budget=0, timing_repeats=1,
+                     use_cost_model=False, seed=0)
+
+
+def _assert_correct(m, plan, rtol=1e-4):
+    x = np.random.default_rng(0).standard_normal(m.n_cols).astype(np.float32)
+    oracle = m.spmv_dense_oracle(x)
+    y = np.asarray(plan(x))
+    scale = np.abs(oracle).max() + 1e-30
+    np.testing.assert_allclose(y, oracle, atol=rtol * scale, rtol=0)
+
+
+# ------------------------------- datasets -----------------------------------
+
+def test_corpus_registry_and_determinism():
+    a = synthetic_corpus("smoke")
+    b = synthetic_corpus("smoke")
+    assert a == b and len(a) == 10
+    assert all(e.family in CORPUS_FAMILIES for e in a)
+    m1, m2 = a[0].build(), a[0].build()
+    assert np.array_equal(m1.rows, m2.rows)
+    assert np.array_equal(m1.cols, m2.cols)
+    np.testing.assert_array_equal(m1.vals, m2.vals)
+    # holdout never collides with a training entry
+    assert not {e.name for e in holdout_corpus("smoke")} & {e.name for e in a}
+    with pytest.raises(ValueError, match="unknown corpus scale"):
+        synthetic_corpus("galactic")
+
+
+@register_family("_test_unavailable")
+def _unavailable(seed: int = 0):
+    return None   # stands in for an offline SuiteSparse entry
+
+
+# ------------------------------- features -----------------------------------
+
+def test_matrix_features_contract(small_regular, small_irregular):
+    phi = matrix_features(small_regular)
+    assert phi.shape == (len(CORPUS_FEATURE_NAMES),)
+    assert np.all(np.isfinite(phi))
+    np.testing.assert_array_equal(phi, matrix_features(small_regular))
+    # a banded and a power-law matrix must be distinguishable
+    assert not np.array_equal(phi, matrix_features(small_irregular))
+
+
+def test_structure_label_of_matches_structure_labels(small_uniform):
+    """The model's label vocabulary (rebuilt from stored bound graphs)
+    must be exactly the Structure.label() strings strategies propose."""
+    from repro.design.space import DesignSpace
+    space = DesignSpace(small_uniform, SearchConfig())
+    checked = 0
+    for s in space.structures()[:6]:
+        for g in space.bind(s, "coarse")[:1]:
+            assert structure_label_of(g) == s.label()
+            checked += 1
+    assert checked >= 3
+
+
+# ----------------------------- GBT persistence ------------------------------
+
+def test_gbt_arrays_roundtrip_bit_exact():
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((64, 5))
+    y = 2.0 * X[:, 0] + np.sin(X[:, 1])
+    gbt = GBTRegressor(n_trees=8, max_depth=3).fit(X, y)
+    clone = gbt_from_arrays(gbt_to_arrays(gbt))
+    np.testing.assert_array_equal(gbt.predict(X), clone.predict(X))
+
+
+# ------------------------- sweep + model pipeline ---------------------------
+
+@pytest.fixture(scope="module")
+def warm_store(tmp_path_factory):
+    """Sweep 3 tiny matrices (+1 unavailable entry) into a fresh store,
+    then train + save the corpus model next to it."""
+    store_dir = tmp_path_factory.mktemp("corpus-store")
+    store = repro.PlanStore(store_dir)
+    entries = synthetic_corpus("smoke")[:3]
+    from repro.corpus.datasets import CorpusEntry
+    entries.append(CorpusEntry(name="offline", family="_test_unavailable",
+                               params=()))
+    recs = run_sweep(entries, store, budget=_TINY)
+    model = train_from_store(store_dir)
+    model.save(default_model_path(store_dir))
+    return store, store_dir, entries, recs, model
+
+
+def test_sweep_fills_store_and_records(warm_store):
+    store, store_dir, entries, recs, _ = warm_store
+    assert len(recs) == 3                       # unavailable entry skipped
+    assert not any(r.error for r in recs)
+    assert all(r.label and r.graph for r in recs)
+    assert len(list(store_dir.glob("*.stats.json"))) == 3
+    # records round-trip through the JSONL file
+    loaded = load_records(store_dir / RECORDS_FILENAME)
+    assert [r.name for r in loaded] == [r.name for r in recs]
+    rows = training_rows(loaded)
+    assert rows and all(lab not in PSEUDO_LABELS for _, lab, _ in rows)
+    assert all(slow >= 1.0 for *_, slow in rows)
+
+
+def test_model_train_save_load_fingerprint(warm_store):
+    _, store_dir, entries, _, model = warm_store
+    assert model.labels and len(model.exemplar_labels) == 3
+    clone = CorpusModel.load(default_model_path(store_dir))
+    assert clone.fingerprint() == model.fingerprint()
+    phi = matrix_features(entries[0].build())
+    assert model.rank_labels(phi) == clone.rank_labels(phi)
+    graphs = model.suggest_graphs(phi, k=2)
+    assert 1 <= len(graphs) <= 2
+    assert len({lab for lab, _ in graphs}) == len(graphs)
+
+
+def test_model_gbt_path_and_fallback():
+    rng = np.random.default_rng(1)
+    feats = [rng.standard_normal(len(CORPUS_FEATURE_NAMES)) for _ in range(6)]
+    exemplars = [(feats[i], "A" if i % 2 else "B", {"g": i}, 1.0)
+                 for i in range(6)]
+    # label "B" always 2x slower: the GBT must learn to rank "A" first
+    rows = [(f, lab, 1.0 if lab == "A" else 2.0)
+            for f in feats for lab in ("A", "B")]
+    model = CorpusModel.fit(rows, exemplars)
+    assert model.gbt is not None and model.mad is not None
+    assert model.rank_labels(feats[0])[0][1] == "A"
+    # too few rows -> nearest-exemplar fallback, still ranks all labels
+    small = CorpusModel.fit(rows[:2], exemplars)
+    assert small.gbt is None
+    assert {lab for _, lab in small.rank_labels(feats[0])} == {"A", "B"}
+    # fingerprints are content hashes: different training data differs
+    assert model.fingerprint() != small.fingerprint()
+
+
+def test_train_from_empty_store_raises(tmp_path):
+    with pytest.raises(ValueError, match="no exemplars"):
+        train_from_store(tmp_path)
+
+
+# --------------------------- strategies end-to-end --------------------------
+
+def test_learned_and_portfolio_registered():
+    from repro.corpus.portfolio import PortfolioStrategy
+    from repro.design.strategies import (LearnedStrategy, STRATEGY_REGISTRY,
+                                         make_strategy)
+    assert "learned" in STRATEGY_REGISTRY
+    assert isinstance(make_strategy("learned"), LearnedStrategy)
+    # "portfolio" resolves through the lazy corpus module hook
+    assert isinstance(make_strategy("portfolio"), PortfolioStrategy)
+
+
+def test_compile_learned_strategy_correct(warm_store):
+    store, _, _, _, _ = warm_store
+    m = holdout_corpus("smoke")[0].build()
+    plan = repro.compile(m, budget=_TINY, strategy="learned", store=store)
+    _assert_correct(m, plan)
+    res = plan.search_result
+    assert res is not None and res.strategy_name == "learned"
+
+
+def test_compile_portfolio_reuse_fast_path(warm_store):
+    """Same matrix as a swept entry, different strategy key: the store
+    misses on the exact key but suggest() reuse hits at distance 0, so
+    the anneal refinement is skipped and the compile stays tiny."""
+    store, _, entries, _, _ = warm_store
+    m = entries[0].build()
+    plan = repro.compile(m, budget=_TINY, strategy="portfolio", store=store)
+    _assert_correct(m, plan)
+    res = plan.search_result
+    assert res is not None and res.strategy_name == "portfolio"
+    # the suggested graph is timed exactly once: either as compile()'s
+    # automatic "warm" start or as the portfolio's own "reuse" proposal
+    # (whichever runs first memoises the other)
+    assert any(r.structure in ("warm", "reuse") for r in res.records)
+    # reuse + learned predictions only — no full walk behind them
+    assert res.n_evaluations <= 16

@@ -155,9 +155,14 @@ def test_compile_deadline_s_bounds_search(matrix):
 
 def test_no_faults_means_no_behavior_change(matrix):
     """The robustness knobs default inert: same candidate walk with and
-    without the machinery engaged (golden-trace parity holds)."""
-    res_a = run_search(matrix, _cfg())
-    res_b = run_search(matrix, _cfg())
+    without the machinery engaged (golden-trace parity holds).
+
+    use_cost_model=False: the cost-model fine phase picks its refinement
+    targets from measured timings, so under machine load two otherwise
+    identical runs can diverge there — the parity contract is about the
+    timing-independent walk."""
+    res_a = run_search(matrix, _cfg(use_cost_model=False))
+    res_b = run_search(matrix, _cfg(use_cost_model=False))
     assert [r.structure for r in res_a.records] == \
         [r.structure for r in res_b.records]
     assert not res_a.fallback and res_a.n_quarantined == 0
