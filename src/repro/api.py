@@ -431,6 +431,9 @@ class ShardedSpmvPlan:
     bounds: tuple                   # ((start, stop), ...) per shard
     target: Target
     replicated_bytes: int = 0       # closure-design baseline (all shards)
+    # aggregated per-shard failure taxonomy (sorted (bucket, count) pairs);
+    # a "fallback" entry counts shards substituted with the baseline
+    failure_counts: Optional[tuple] = None
     search_result: Optional[object] = dataclasses.field(
         default=None, compare=False, repr=False)
 
@@ -451,6 +454,11 @@ class ShardedSpmvPlan:
     def from_program(cls, sprog, target: Target,
                      search_result=None) -> "ShardedSpmvPlan":
         """Adopt a ``dist.spmv.ShardedSpmvProgram``'s stacked operands."""
+        failure_counts = None
+        if search_result is not None and getattr(search_result,
+                                                 "failure_counts", None):
+            failure_counts = tuple(
+                sorted(search_result.failure_counts.items()))
         return cls(stacks=dict(sprog.stacks),
                    steps_json=json.dumps(sprog.steps),
                    mode=sprog.mode, n_rows=sprog.n_rows,
@@ -459,6 +467,7 @@ class ShardedSpmvPlan:
                    bounds=tuple((s.start, s.stop) for s in sprog.shards),
                    target=target,
                    replicated_bytes=sprog.replicated_format_bytes,
+                   failure_counts=failure_counts,
                    search_result=search_result)
 
     def _n_out(self) -> int:
@@ -496,6 +505,9 @@ class ShardedSpmvPlan:
                  f"axis={self.target.axis_name}",
                  f"  format bytes/device: {self.per_device_format_bytes} "
                  f"(closure baseline {self.replicated_bytes})"]
+        if self.failure_counts:
+            buckets = ", ".join(f"{k}={v}" for k, v in self.failure_counts)
+            lines.append(f"  shard-search failures: {buckets}")
         for s in steps:
             lines.append(f"  family {s['key']}: {s['report']}")
         return "\n".join(lines)
@@ -525,6 +537,9 @@ class ShardedSpmvPlan:
                   "nnz": self.nnz, "band_rows": self.band_rows,
                   "bounds": [list(b) for b in self.bounds],
                   "replicated_bytes": self.replicated_bytes,
+                  "failure_counts": (None if self.failure_counts is None
+                                     else [[p[0], int(p[1])]
+                                           for p in self.failure_counts]),
                   "target": self.target.spec_dict()}
         _atomic_savez(path, header, arrays)
 
@@ -536,18 +551,19 @@ def _tree_flatten_sharded(plan: ShardedSpmvPlan):
     leaves = tuple(plan.stacks[k] for k in keys)
     aux = (keys, plan.steps_json, plan.mode, plan.n_rows, plan.n_cols,
            plan.nnz, plan.band_rows, plan.bounds, plan.target,
-           plan.replicated_bytes)
+           plan.replicated_bytes, plan.failure_counts)
     return leaves, aux
 
 
 def _tree_unflatten_sharded(aux, leaves) -> ShardedSpmvPlan:
     (keys, steps_json, mode, n_rows, n_cols, nnz, band_rows, bounds,
-     target, repl) = aux
+     target, repl, failure_counts) = aux
     return ShardedSpmvPlan(stacks=dict(zip(keys, leaves)),
                            steps_json=steps_json, mode=mode, n_rows=n_rows,
                            n_cols=n_cols, nnz=nnz, band_rows=band_rows,
                            bounds=bounds, target=target,
-                           replicated_bytes=repl)
+                           replicated_bytes=repl,
+                           failure_counts=failure_counts)
 
 
 jax.tree_util.register_pytree_node(ShardedSpmvPlan, _tree_flatten_sharded,
@@ -599,13 +615,16 @@ def load_plan(path, mesh=None) -> Union[SpmvPlan, ShardedSpmvPlan]:
             sharding = NamedSharding(mesh, P(target.axis_name))
             stacks = {k: jax.device_put(v, sharding)
                       for k, v in stacks.items()}
+        fc = header.get("failure_counts")
         return ShardedSpmvPlan(
             stacks=stacks, steps_json=json.dumps(header["steps"]),
             mode=header["mode"], n_rows=header["n_rows"],
             n_cols=header["n_cols"], nnz=header["nnz"],
             band_rows=header["band_rows"],
             bounds=tuple(tuple(b) for b in header["bounds"]),
-            target=target, replicated_bytes=header["replicated_bytes"])
+            target=target, replicated_bytes=header["replicated_bytes"],
+            failure_counts=(None if fc is None
+                            else tuple((k, int(v)) for k, v in fc)))
 
 
 # -------------------------------- compile -----------------------------------

@@ -58,6 +58,21 @@ def _build_parser() -> argparse.ArgumentParser:
                     help="train the corpus model from the --store "
                          "directory's sidecars + sweep records, save it "
                          "next to the store, and exit (no compile)")
+    ap.add_argument("--sweep", metavar="SCALE", default=None,
+                    choices=["smoke", "small", "medium"],
+                    help="sweep the synthetic corpus at SCALE into the "
+                         "--store directory (journaled, resumable) and "
+                         "exit (no compile)")
+    ap.add_argument("--resume", action="store_true",
+                    help="with --sweep: skip entries already journaled "
+                         "in sweep_records.jsonl (crash-safe resume)")
+    ap.add_argument("--isolate", default=None, choices=["process"],
+                    help="with --sweep: run each compile in its own "
+                         "subprocess so a crashing candidate kills one "
+                         "entry, not the sweep")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="with --sweep: retry a failed entry up to N "
+                         "times with exponential backoff")
     ap.add_argument("--repeats", type=int, default=5,
                     help="timing repeats for the benchmark")
     return ap
@@ -81,6 +96,26 @@ def _train_from_store(store_dir: str) -> int:
     return 0
 
 
+def _run_corpus_sweep(args) -> int:
+    import repro
+    from repro.corpus.datasets import synthetic_corpus
+    from repro.corpus.sweep import run_sweep
+
+    store = repro.PlanStore(args.store)
+    entries = synthetic_corpus(args.sweep)
+    budget = repro.SearchConfig(max_seconds=args.seconds, timing_repeats=1)
+    recs = run_sweep(entries, store, budget=budget,
+                     strategy=args.strategy, deadline_s=args.deadline,
+                     resume=args.resume, isolate=args.isolate,
+                     retries=args.retries, progress=print)
+    failed = sum(1 for r in recs if r.error)
+    skipped = len(entries) - len(recs)
+    print(f"sweep[{args.sweep}]: {len(recs)} swept "
+          f"({failed} errors), {skipped} skipped"
+          + (" (resume)" if args.resume and skipped else ""))
+    return 1 if (recs and failed == len(recs)) else 0
+
+
 def main(argv=None) -> int:
     parser = _build_parser()
     args = parser.parse_args(argv)
@@ -89,6 +124,10 @@ def main(argv=None) -> int:
         if not args.store:
             parser.error("--train-from-store requires --store DIR")
         return _train_from_store(args.store)
+    if args.sweep:
+        if not args.store:
+            parser.error("--sweep requires --store DIR")
+        return _run_corpus_sweep(args)
     if not (args.mtx or args.demo):
         parser.error("one of --mtx / --demo is required (or "
                      "--train-from-store)")

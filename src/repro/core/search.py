@@ -47,7 +47,9 @@ from .matrices import SparseMatrix
 
 __all__ = ["SearchConfig", "SearchResult", "AlphaSparseSearch", "search",
            "run_search", "ProgramCache", "Structure", "DesignSpace",
-           "CandidateTimeout", "FAILURE_BUCKETS", "fault_hook"]
+           "CandidateTimeout", "FAILURE_BUCKETS", "fault_hook",
+           "check_candidate_deadline", "sleep_checking_deadline",
+           "cooperative_deadline_available", "current_search_matrix"]
 
 
 # compat alias: the structure enumerator moved to repro.design.space
@@ -102,18 +104,116 @@ def fault_hook(hook: Optional[Callable]):
         _FAULT_HOOK = prev
 
 
+# one process-wide warning when a deadline has no SIGALRM backstop
+_WARNED_NO_BACKSTOP = False
+
+# Per-thread stack of active candidate deadlines (monotonic instants).
+# The *cooperative* half of the per-candidate timeout: every thread that
+# evaluates candidates pushes its deadline here, and the evaluation
+# pipeline calls ``check_candidate_deadline()`` between stages — so
+# timeouts fire on ANY thread (pooled per-shard searches included), not
+# just where SIGALRM can reach.
+_DEADLINE_TLS = threading.local()
+
+# Per-thread current search matrix — lets fault hooks and diagnostics
+# identify *which* search (e.g. which dist shard) a candidate belongs to
+# when several run concurrently on a thread pool.
+_SEARCH_TLS = threading.local()
+
+
+def current_search_matrix():
+    """The matrix of the search evaluating candidates on this thread
+    (None outside a search). Fault hooks use this to target one shard of
+    a pooled ``dist_search`` without guessing from output shapes."""
+    return getattr(_SEARCH_TLS, "matrix", None)
+
+
+def _active_deadline() -> Optional[float]:
+    stack = getattr(_DEADLINE_TLS, "stack", None)
+    return stack[-1] if stack else None
+
+
+def check_candidate_deadline() -> None:
+    """Cooperative deadline checkpoint: raise :class:`CandidateTimeout`
+    when the innermost per-candidate deadline on this thread has passed.
+
+    Safe to call from any thread and a no-op when no deadline is active,
+    so long-running evaluation stages (and injected fault hooks) can
+    sprinkle it freely."""
+    dl = _active_deadline()
+    if dl is not None and time.monotonic() > dl:
+        raise CandidateTimeout(
+            "candidate exceeded its wall-clock deadline "
+            "(cooperative checkpoint)")
+
+
+def sleep_checking_deadline(seconds: float, interval: float = 0.01) -> None:
+    """Sleep in small slices, honouring the cooperative candidate
+    deadline — raises :class:`CandidateTimeout` as soon as it expires.
+
+    This is how tests/benchmarks plant a *hanging* candidate that is
+    killable on worker threads: interpret-mode execution passes through
+    Python (checkpointable), while a raw ``time.sleep`` models a C-level
+    hang only SIGALRM (main thread) can interrupt."""
+    end = time.monotonic() + float(seconds)
+    while True:
+        check_candidate_deadline()
+        left = end - time.monotonic()
+        if left <= 0:
+            return
+        time.sleep(min(interval, left))
+
+
+def cooperative_deadline_available() -> bool:
+    """Self-check that the cooperative deadline path is wired: entering
+    a candidate deadline must install a checkpointable deadline on this
+    thread. ``dist_search`` asserts this before pooling per-shard
+    searches with a candidate timeout configured."""
+    with _candidate_deadline(60.0):
+        return _active_deadline() is not None
+
+
 @contextlib.contextmanager
 def _candidate_deadline(seconds: Optional[float]):
-    """SIGALRM-based per-candidate wall-clock guard.
+    """Per-candidate wall-clock guard: cooperative monotonic deadline on
+    every thread, SIGALRM backstop on the main thread.
 
-    Interpret-mode Pallas executes through the Python interpreter, so a
-    hung candidate is interruptible by a signal; a candidate stuck inside
-    a long C call is only interrupted when control returns to Python.
-    No-op (yields False) when no deadline is set, off the main thread, or
-    on platforms without SIGALRM."""
-    if (not seconds or seconds <= 0 or not hasattr(signal, "SIGALRM")
-            or threading.current_thread() is not threading.main_thread()):
-        yield False
+    The deadline is pushed onto a thread-local stack that
+    ``check_candidate_deadline()`` consults between evaluation stages,
+    so candidate timeouts fire on any thread — including pooled
+    per-shard ``dist_search`` workers. On the main thread SIGALRM is
+    additionally armed as a backstop for *true* hangs (a candidate stuck
+    inside one long call that never reaches a checkpoint); interpret-mode
+    Pallas executes through the Python interpreter, so the signal can
+    interrupt it, while a candidate stuck inside a C call is only
+    interrupted when control returns to Python. Off the main thread no
+    such backstop exists (warned once): a non-cooperative hang is only
+    caught at the next checkpoint.
+
+    Yields "off", "cooperative", or "cooperative+signal"."""
+    if not seconds or seconds <= 0:
+        yield "off"
+        return
+    stack = getattr(_DEADLINE_TLS, "stack", None)
+    if stack is None:
+        stack = _DEADLINE_TLS.stack = []
+    stack.append(time.monotonic() + float(seconds))
+    use_signal = (hasattr(signal, "SIGALRM")
+                  and threading.current_thread() is threading.main_thread())
+    if not use_signal:
+        global _WARNED_NO_BACKSTOP
+        if not _WARNED_NO_BACKSTOP:
+            _WARNED_NO_BACKSTOP = True
+            warnings.warn(
+                "per-candidate deadline armed without a SIGALRM backstop "
+                "(worker thread or platform without SIGALRM): cooperative "
+                "checkpoints will catch overruns between evaluation "
+                "stages, but a candidate hung inside one non-Python call "
+                "cannot be interrupted", RuntimeWarning)
+        try:
+            yield "cooperative"
+        finally:
+            stack.pop()
         return
 
     def _expire(signum, frame):
@@ -123,10 +223,11 @@ def _candidate_deadline(seconds: Optional[float]):
     prev_handler = signal.signal(signal.SIGALRM, _expire)
     signal.setitimer(signal.ITIMER_REAL, float(seconds))
     try:
-        yield True
+        yield "cooperative+signal"
     finally:
         signal.setitimer(signal.ITIMER_REAL, 0.0)
         signal.signal(signal.SIGALRM, prev_handler)
+        stack.pop()
 
 
 def _classify_failure(exc: BaseException) -> str:
@@ -175,9 +276,12 @@ class SearchConfig:
     tiles_per_step_choices: Optional[tuple] = None
     dtype_choices: Optional[tuple] = None
     # -- robustness knobs (fault-tolerant compile) --
-    # wall-clock deadline per candidate: a hanging interpret-mode Pallas
-    # candidate is killed (SIGALRM, main thread only) and recorded as a
-    # failed EvalRecord instead of wedging the whole search. None = off.
+    # wall-clock deadline per candidate: an overrunning candidate is
+    # killed — cooperative monotonic checkpoints between evaluation
+    # stages on ANY thread (pooled per-shard searches included), plus a
+    # SIGALRM backstop on the main thread for true in-call hangs — and
+    # recorded as a failed EvalRecord instead of wedging the whole
+    # search. None = off.
     candidate_timeout_s: Optional[float] = None
     # hard failures (crash/oom/timeout/wrong_result) from the same
     # structure before it is quarantined and no longer proposed
@@ -323,14 +427,21 @@ class AlphaSparseSearch:
                           max(remaining, 0.05))
         try:
             with _candidate_deadline(timeout):
+                # cooperative checkpoints between pipeline stages: a
+                # candidate that overruns is caught here on any thread;
+                # the SIGALRM backstop (main thread) covers true hangs
                 graph.validate()
+                check_candidate_deadline()
                 meta = run_graph(self.m, graph)
+                check_candidate_deadline()
                 prog = build_program(meta, backend=self.cfg.backend)
+                check_candidate_deadline()
                 y = np.asarray(prog(self._x))
                 if _FAULT_HOOK is not None:
                     hooked = _FAULT_HOOK(graph, y)
                     if hooked is not None:
                         y = np.asarray(hooked)
+                check_candidate_deadline()
                 if self.cfg.check_correctness:
                     scale = np.abs(self._oracle).max() + 1e-30
                     # bf16-stored candidates carry ~2^-8 relative storage
@@ -348,6 +459,7 @@ class AlphaSparseSearch:
                 # timing: min over repeats of a blocking call
                 best = math.inf
                 for _ in range(self.cfg.timing_repeats):
+                    check_candidate_deadline()
                     t0 = time.perf_counter()
                     prog(self._x).block_until_ready()
                     best = min(best, time.perf_counter() - t0)
@@ -402,6 +514,16 @@ class AlphaSparseSearch:
 
     # -- the driver loop over the SearchStrategy protocol --
     def run(self, strategy=None, warm_start=()) -> SearchResult:
+        # publish this search's matrix on the evaluating thread so fault
+        # hooks/diagnostics can tell concurrent (per-shard) searches apart
+        prev_m = getattr(_SEARCH_TLS, "matrix", None)
+        _SEARCH_TLS.matrix = self.m
+        try:
+            return self._run(strategy, warm_start)
+        finally:
+            _SEARCH_TLS.matrix = prev_m
+
+    def _run(self, strategy, warm_start) -> SearchResult:
         strategy = make_strategy(strategy)
         t_start = time.perf_counter()
         deadline = t_start + self.cfg.max_seconds

@@ -20,6 +20,8 @@ Two sources:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import os
 import tarfile
 import urllib.request
@@ -68,6 +70,16 @@ class CorpusEntry:
         e.g. a SuiteSparse entry while offline)."""
         fn = CORPUS_FAMILIES[self.family]
         return fn(seed=self.seed, **dict(self.params))
+
+    def fingerprint(self) -> str:
+        """Stable identity for sweep-resume journals: a short hash of the
+        full (name, family, params, seed) tuple, so renaming a family or
+        re-parameterising an entry never aliases an old journal line."""
+        payload = json.dumps(
+            {"name": self.name, "family": self.family,
+             "params": list(self.params), "seed": self.seed},
+            sort_keys=True, default=repr)
+        return hashlib.sha1(payload.encode()).hexdigest()[:16]
 
 
 @register_family("banded")

@@ -17,26 +17,40 @@ module exists for; ``tests/test_design.py`` guards the divergence).
 The search *policy* is pluggable per the ``repro.design`` SearchStrategy
 protocol: ``ShardedSearchConfig.strategy`` (name or instance) is handed
 to every per-shard ``run_search``.
+
+Fault domains: each shard's search is its own failure domain. A shard
+search that raises (crash, OOM, hang past the deadline, a design-space
+bug) is classified under the ``repro.core.search`` failure taxonomy and
+the shard is substituted with its trusted baseline program
+(``baseline_shard_program``) — the compile degrades instead of failing.
+Per-shard failure counts are aggregated on the result so the degradation
+is observable (``ShardedSearchResult.failure_counts``,
+``failed_shards()``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
+import traceback
+import warnings
+from collections import Counter
 from concurrent.futures import ThreadPoolExecutor
-from typing import Optional
+from typing import Callable, Optional
 
+from repro.core.deprecation import warn_once
 from repro.core.matrices import SparseMatrix
 from repro.core.search import (ProgramCache, SearchConfig, SearchResult,
-                               run_search)
-from repro.core.graph import run_graph
-from repro.core.kernel_builder import build_program
+                               _classify_failure,
+                               cooperative_deadline_available, run_search)
 from repro.design.strategies import SearchStrategy
 
 from .spmv import (RowShard, ShardedSpmvProgram, _axis_size,
-                   build_sharded_spmv, default_shard_graph, partition_matrix)
+                   baseline_shard_program, build_sharded_spmv,
+                   partition_matrix)
 
 __all__ = ["ShardedSearchConfig", "ShardReport", "ShardedSearchResult",
-           "dist_search"]
+           "dist_search", "shard_fault_hook"]
 
 
 def _default_budget() -> SearchConfig:
@@ -62,14 +76,35 @@ class ShardedSearchConfig:
     # per-shard searches share no state (each gets its own rng, design
     # space and derived seed), so they run on a thread pool. None = one
     # worker per searchable shard capped at the CPU count; 1 = sequential.
-    # Note: the per-candidate SIGALRM deadline is a no-op off the main
-    # thread, so hung-candidate protection inside pooled searches falls
-    # back to the wall-clock checks between candidates.
+    # Hung-candidate protection inside pooled searches comes from the
+    # cooperative monotonic deadline threaded through _evaluate (works on
+    # any thread); SIGALRM is only a main-thread backstop for true hangs.
     max_workers: Optional[int] = None
     backend: str = "jax"
     # interpret=True runs backend="pallas" kernels in interpret mode inside
     # the shard_map body (the CPU stand-in for the on-device Mosaic path)
     interpret: bool = True
+
+
+# process-global fault-injection seam: a hook(shard) invoked at the top of
+# every per-shard design (including heuristic shards). Raising from it
+# forces that shard's whole search to fail, exercising the baseline
+# substitution path — candidate-level fault_hook alone can't, because the
+# in-search baseline fallback absorbs candidate failures.
+_SHARD_FAULT_HOOK: Optional[Callable[[RowShard], None]] = None
+
+
+@contextlib.contextmanager
+def shard_fault_hook(hook: Callable[[RowShard], None]):
+    """Install a per-shard fault-injection hook for the duration of the
+    context. Benchmark/test seam — see ``benchmarks/fault_inject.py``."""
+    global _SHARD_FAULT_HOOK
+    prev = _SHARD_FAULT_HOOK
+    _SHARD_FAULT_HOOK = hook
+    try:
+        yield
+    finally:
+        _SHARD_FAULT_HOOK = prev
 
 
 @dataclasses.dataclass
@@ -78,6 +113,11 @@ class ShardReport:
     searched: bool
     graph_label: Optional[str]
     result: Optional[SearchResult]    # None when heuristic / empty
+    # shard-level fault domain: True when the shard's search raised and
+    # the baseline program was substituted (degraded-but-correct)
+    failed: bool = False
+    failure: Optional[str] = None     # taxonomy bucket of the failure
+    error: Optional[str] = None       # one-line repr of the exception
 
     @property
     def family(self) -> Optional[str]:
@@ -90,6 +130,9 @@ class ShardReport:
 class ShardedSearchResult:
     program: ShardedSpmvProgram
     reports: list[ShardReport]
+    # aggregated over all shards: per-shard SearchResult.failure_counts
+    # summed, plus one "fallback" per shard substituted with the baseline
+    failure_counts: dict = dataclasses.field(default_factory=dict)
 
     def families(self) -> list[Optional[str]]:
         return [r.family for r in self.reports]
@@ -97,6 +140,9 @@ class ShardedSearchResult:
     def is_heterogeneous(self) -> bool:
         fams = {f for f in self.families() if f is not None}
         return len(fams) > 1
+
+    def failed_shards(self) -> list[int]:
+        return [r.shard.index for r in self.reports if r.failed]
 
 
 def dist_search(m: SparseMatrix, mesh,
@@ -122,6 +168,17 @@ def dist_search(m: SparseMatrix, mesh,
         # (pass a name/class to parallelize)
         workers = 1
     if workers > 1 and n_searchable > 1:
+        if cfg.search.candidate_timeout_s is not None:
+            # satellite: the old SIGALRM-only deadline was silently a
+            # no-op on pool threads. The cooperative path must be active
+            # for pooled searches; if it ever isn't, say so once instead
+            # of silently running unprotected.
+            if not cooperative_deadline_available():
+                warn_once(
+                    "dist-pooled-deadline",
+                    "candidate_timeout_s is set but the cooperative "
+                    "deadline path is unavailable; pooled per-shard "
+                    "searches have no hang protection")
         with ThreadPoolExecutor(max_workers=workers,
                                 thread_name_prefix="shard-search") as ex:
             # ex.map preserves shard order: results are positionally
@@ -132,10 +189,17 @@ def dist_search(m: SparseMatrix, mesh,
         outs = [_design_shard(s, cfg, cache) for s in shards]
     programs = [p for p, _ in outs]
     reports = [r for _, r in outs]
+    counts: Counter = Counter()
+    for r in reports:
+        if r.result is not None and r.result.failure_counts:
+            counts.update(r.result.failure_counts)
+        if r.failed:
+            counts["fallback"] += 1
     program = build_sharded_spmv(shards, programs, mesh, cfg.axis_name,
                                  backend=cfg.backend,
                                  interpret=cfg.interpret)
-    return ShardedSearchResult(program=program, reports=reports)
+    return ShardedSearchResult(program=program, reports=reports,
+                               failure_counts=dict(counts))
 
 
 def _design_shard(s: RowShard, cfg: ShardedSearchConfig,
@@ -143,19 +207,38 @@ def _design_shard(s: RowShard, cfg: ShardedSearchConfig,
     """Design one shard: searched, heuristic, or empty. Shares nothing
     mutable with other shards (thread-pool safe): the per-shard search
     derives its own rng from ``seed + shard_id`` and builds its own
-    DesignSpace."""
+    DesignSpace.
+
+    Each shard is its own fault domain: any exception from the search (or
+    the injected ``shard_fault_hook``) is classified under the failure
+    taxonomy and the shard falls back to its baseline program — one bad
+    shard degrades the compile, it doesn't fail it."""
     if s.is_empty:
         return None, ShardReport(s, False, None, None)
-    if s.matrix.nnz >= cfg.min_nnz_for_search:
-        # per-shard seed: shard walks must diverge (seed + shard_id),
-        # not replay one walk n_shards times
-        scfg = dataclasses.replace(cfg.search,
-                                   seed=cfg.seed + cfg.search.seed + s.index,
-                                   backend=cfg.backend)
-        res = run_search(s.matrix, scfg, cache=cache, strategy=cfg.strategy)
-        return res.best_program, ShardReport(s, True,
-                                             res.best_graph.label(), res)
-    g = default_shard_graph(s.matrix)
-    meta = run_graph(s.matrix, g)
-    prog = build_program(meta, backend=cfg.backend, jit=False)
-    return prog, ShardReport(s, False, g.label(), None)
+    try:
+        hook = _SHARD_FAULT_HOOK
+        if hook is not None:
+            hook(s)
+        if s.matrix.nnz >= cfg.min_nnz_for_search:
+            # per-shard seed: shard walks must diverge (seed + shard_id),
+            # not replay one walk n_shards times
+            scfg = dataclasses.replace(
+                cfg.search,
+                seed=cfg.seed + cfg.search.seed + s.index,
+                backend=cfg.backend)
+            res = run_search(s.matrix, scfg, cache=cache,
+                             strategy=cfg.strategy)
+            return res.best_program, ShardReport(s, True,
+                                                 res.best_graph.label(), res)
+        g, prog = baseline_shard_program(s.matrix, backend=cfg.backend)
+        return prog, ShardReport(s, False, g.label(), None)
+    except Exception as exc:  # shard fault domain: degrade, don't fail
+        bucket = _classify_failure(exc)
+        warnings.warn(
+            f"shard {s.index} search failed ({bucket}: {exc!r}); "
+            "substituting the baseline program", RuntimeWarning,
+            stacklevel=2)
+        g, prog = baseline_shard_program(s.matrix, backend=cfg.backend)
+        tb = traceback.format_exception_only(type(exc), exc)[-1].strip()
+        return prog, ShardReport(s, False, g.label(), None,
+                                 failed=True, failure=bucket, error=tb)

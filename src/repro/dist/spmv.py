@@ -153,6 +153,22 @@ def default_shard_graph(m: SparseMatrix) -> OperatorGraph:
     return SEG_GRAPH if m.is_irregular() else ELL_GRAPH
 
 
+def baseline_shard_program(m: SparseMatrix, backend: str = "jax"):
+    """Build one shard's trusted baseline program: the search-free
+    heuristic design, no machine-designed risk, no fault hook.
+
+    The single definition of "the baseline" for the dist plane — used
+    both for shards too small to search (``min_nnz_for_search``) and as
+    the degraded-but-correct substitute when a shard's search fails
+    (``dist_search``'s per-shard fault domain). Returns
+    ``(graph, program)``."""
+    from repro.core.graph import run_graph
+    from repro.core.kernel_builder import build_program
+    g = default_shard_graph(m)
+    meta = run_graph(m, g)
+    return g, build_program(meta, backend=backend, jit=False)
+
+
 # ------------------- operand packing (per-family stacking) ------------------
 
 def _pad_to(a: np.ndarray, shape: tuple, fill) -> np.ndarray:

@@ -15,19 +15,29 @@ One manager owns one live plan lineage and its matrix. Every
 
 Re-searches run on a daemon thread through the public
 ``repro.compile(matrix, target, deadline_s=..., warm_start=[graph])``
-path (the per-candidate SIGALRM deadline degrades gracefully off the
-main thread). A landed plan is adopted by :meth:`poll` — catch-up
-patched when the pattern moved while searching — then *published through
-the existing hot-swap admission gate*: ``PlanStore.put`` under the birth
-key wakes the serving ``PlanWatch``, and ``PlanExecutor.maybe_reload``
-admits it (version-checked + oracle-spot-checked against the manager's
-current matrix).
+path (per-candidate deadlines are cooperative monotonic checkpoints, so
+they fire on the daemon thread too). A landed plan is adopted by
+:meth:`poll` — catch-up patched when the pattern moved while searching —
+then *published through the existing hot-swap admission gate*:
+``PlanStore.put`` under the birth key wakes the serving ``PlanWatch``,
+and ``PlanExecutor.maybe_reload`` admits it (version-checked +
+oracle-spot-checked against the manager's current matrix).
+
+Watchdog: a failed or silently-dead re-search thread is no longer
+invisible. The failure traceback lands in ``stats()["last_error"]``, the
+owner-thread pump (:meth:`watchdog_tick`, called from :meth:`poll` and
+from an attached executor's ``maybe_reload``) restarts the search with
+exponential backoff, and after ``max_research_strikes`` consecutive
+failures the manager stops retrying and escalates to the ``ft`` health
+machine (``report_component("dyn-research", healthy=False)``) instead of
+going dark.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
+import traceback
 from typing import Optional
 
 from repro.core.matrices import SparseMatrix
@@ -52,7 +62,9 @@ class DynamicSparsityManager:
                  policy: Optional[DriftPolicy] = None,
                  executor=None, store=None,
                  store_budget=None, store_graph=None, store_strategy=None,
-                 research_budget=None, research_deadline_s: float = 20.0):
+                 research_budget=None, research_deadline_s: float = 20.0,
+                 ft=None, max_research_strikes: int = 3,
+                 research_backoff_s: float = 0.5):
         self.matrix = matrix.canonical()    # pattern the live plan encodes
         self.birth_matrix = self.matrix     # the store/watch key
         self.plan = plan
@@ -64,6 +76,12 @@ class DynamicSparsityManager:
         self._store_key = (store_budget, store_graph, store_strategy)
         self.research_budget = research_budget
         self.research_deadline_s = research_deadline_s
+        # watchdog policy: restart a failed re-search with exponential
+        # backoff; after max_research_strikes consecutive failures stop
+        # retrying and escalate to the ft health machine (if attached)
+        self.ft = ft
+        self.max_research_strikes = max_research_strikes
+        self.research_backoff_s = research_backoff_s
 
         self.birth_stats = pattern_stats(self.matrix)
         self._patcher = PlanPatcher(plan)
@@ -81,6 +99,19 @@ class DynamicSparsityManager:
         self.researches_failed = 0
         self.last_drift = None
         self.last_research_reason = None
+        # -- watchdog state --
+        self.last_error: Optional[str] = None   # traceback of last failure
+        self.research_strikes = 0               # consecutive failures
+        self.research_dead = False              # struck out; escalated
+        self.watchdog_restarts = 0
+        self._retry_pending = None              # (snapshot, reason) | None
+        self._retry_at: Optional[float] = None  # monotonic restart time
+        self._research_outcome: Optional[str] = None  # None while running
+        self._current_research = None           # (snapshot, reason) | None
+
+        if executor is not None and hasattr(executor,
+                                            "attach_research_monitor"):
+            executor.attach_research_monitor(self)
 
     # -- views -------------------------------------------------------------
     @property
@@ -113,8 +144,10 @@ class DynamicSparsityManager:
             self.join(timeout=max(deadline - time.monotonic(), 0.0))
             self.poll()
             with self._lock:
-                if not self.research_active() and self._landed is None:
+                if (not self.research_active() and self._landed is None
+                        and self._retry_pending is None):
                     return True
+            time.sleep(0.01)   # a backoff retry is armed; let it fire
         return False
 
     # -- the control loop --------------------------------------------------
@@ -162,6 +195,7 @@ class DynamicSparsityManager:
         under the birth key (waking the serving watch) and/or a direct
         ``PlanExecutor.swap_plan`` when no store is attached.
         """
+        self.watchdog_tick()
         with self._lock:
             if self._landed is None:
                 return None
@@ -179,6 +213,14 @@ class DynamicSparsityManager:
                 plan, plan_version=int(getattr(self.plan, "plan_version", 0))
                 + 1)
             self.researches_landed += 1
+            # a landing clears the strike count: the watchdog policy is
+            # about *consecutive* failures, and the component is healthy
+            if self.research_strikes or self.research_dead:
+                self.research_strikes = 0
+                self.research_dead = False
+                self._retry_pending = None
+                if self.ft is not None:
+                    self.ft.report_component("dyn-research", healthy=True)
             self.plan = plan
             self.matrix = target
             self.pending_matrix = None
@@ -205,10 +247,12 @@ class DynamicSparsityManager:
 
     # -- background re-search ----------------------------------------------
     def _start_research(self, snapshot: SparseMatrix, reason: str) -> None:
-        if self.research_active():
+        if self.research_active() or self.research_dead:
             return
         self.researches_started += 1
         self.last_research_reason = reason
+        self._research_outcome = None
+        self._current_research = (snapshot, reason)
         graph = getattr(self.plan, "graph", None)
         warm = (graph,) if graph is not None else None
         target = self.plan.target
@@ -221,16 +265,75 @@ class DynamicSparsityManager:
                 plan = _compile(snapshot, target, budget,
                                 warm_start=warm, deadline_s=deadline)
             except Exception:
+                # the traceback must be observable even before the
+                # watchdog acts: a dead background search that looks like
+                # a slow one is the failure mode this exists to kill
+                tb = traceback.format_exc()
                 with self._lock:
                     self.researches_failed += 1
+                    self.last_error = tb
+                    self._research_outcome = "failed"
+                    self._schedule_retry_locked(snapshot, reason)
                 return
             with self._lock:
+                self._research_outcome = "landed"
                 self._landed = (snapshot, plan)
 
         t = threading.Thread(target=work, name="repro-dyn-research",
                              daemon=True)
         self._thread = t
         t.start()
+
+    def _schedule_retry_locked(self, snapshot, reason) -> None:
+        """Strike accounting + restart scheduling (call with lock held).
+
+        Strike < limit: arm a backoff-delayed retry for the owner-thread
+        pump. Strike == limit: stop retrying (research_dead) and escalate
+        to the ft health machine so the degradation is fleet-visible."""
+        self.research_strikes += 1
+        if self.research_strikes >= self.max_research_strikes:
+            self.research_dead = True
+            self._retry_pending = None
+            self._retry_at = None
+            if self.ft is not None:
+                self.ft.report_component("dyn-research", healthy=False,
+                                         error=self.last_error)
+            return
+        delay = self.research_backoff_s * (2 ** (self.research_strikes - 1))
+        self._retry_at = time.monotonic() + delay
+        self._retry_pending = (snapshot, reason)
+
+    def watchdog_tick(self) -> Optional[dict]:
+        """Owner-thread watchdog pump: detect a silently-dead re-search
+        thread and fire any due backoff restart. Called from :meth:`poll`
+        and from ``PlanExecutor.maybe_reload`` via the attached monitor,
+        so a serving loop keeps the watchdog beating for free."""
+        with self._lock:
+            t = self._thread
+            if (t is not None and not t.is_alive()
+                    and self._research_outcome is None):
+                # the thread died without reporting (killed, or an exit
+                # path outside the try) — record it as a failure
+                self.researches_failed += 1
+                self.last_error = ("re-search thread died without "
+                                   "reporting an outcome")
+                self._research_outcome = "failed"
+                if self._current_research is not None:
+                    self._schedule_retry_locked(*self._current_research)
+            if (self._retry_pending is not None
+                    and not self.research_active()
+                    and self._landed is None
+                    and time.monotonic() >= (self._retry_at or 0.0)):
+                snapshot, reason = self._retry_pending
+                self._retry_pending = None
+                self._retry_at = None
+                self.watchdog_restarts += 1
+                self._start_research(snapshot,
+                                     f"{reason} (watchdog retry "
+                                     f"{self.research_strikes})")
+                return {"action": "research_restarted",
+                        "strikes": self.research_strikes}
+        return None
 
     # -- reporting ---------------------------------------------------------
     def stats(self) -> dict:
@@ -246,4 +349,9 @@ class DynamicSparsityManager:
                     "plan_version": int(getattr(self.plan,
                                                 "plan_version", 0)),
                     "serving_stale": self.pending_matrix is not None,
-                    "last_research_reason": self.last_research_reason}
+                    "last_research_reason": self.last_research_reason,
+                    "last_error": self.last_error,
+                    "research_strikes": self.research_strikes,
+                    "research_dead": self.research_dead,
+                    "watchdog_restarts": self.watchdog_restarts,
+                    "retry_pending": self._retry_pending is not None}

@@ -1,2 +1,2 @@
-from .manager import (FaultToleranceConfig, FaultToleranceManager,  # noqa: F401
-                      NodeFailure, StragglerReport)
+from .manager import (ComponentHealth, FaultToleranceConfig,  # noqa: F401
+                      FaultToleranceManager, NodeFailure, StragglerReport)

@@ -16,11 +16,12 @@ same interface is fed from per-host agents.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Callable, Optional
 
-__all__ = ["FaultToleranceConfig", "FaultToleranceManager", "NodeFailure",
-           "StragglerReport"]
+__all__ = ["ComponentHealth", "FaultToleranceConfig",
+           "FaultToleranceManager", "NodeFailure", "StragglerReport"]
 
 
 class NodeFailure(RuntimeError):
@@ -51,6 +52,17 @@ class _NodeState:
     var: float = 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class ComponentHealth:
+    """Last reported health of one software component (vs. a *node*,
+    which is hardware and heartbeat-tracked)."""
+    name: str
+    healthy: bool
+    error: Optional[str]      # traceback / message when unhealthy
+    since: float              # clock() of the report
+    reports: int              # total reports for this component
+
+
 class FaultToleranceManager:
     def __init__(self, cfg: FaultToleranceConfig = None,
                  clock: Callable[[], float] = time.monotonic):
@@ -59,6 +71,10 @@ class FaultToleranceManager:
         self.nodes: dict[str, _NodeState] = {}
         self.restarts = 0
         self._straggler_log: list[StragglerReport] = []
+        # software-component health (e.g. "dyn-research"): reporters may
+        # live on background threads, so this map has its own lock
+        self._components: dict[str, ComponentHealth] = {}
+        self._component_lock = threading.Lock()
 
     # ------------------------------ inputs --------------------------------
 
@@ -86,6 +102,31 @@ class FaultToleranceManager:
         rep = self.check_straggler(node, step_time)
         self.heartbeat(node, step, step_time)
         return rep
+
+    def report_component(self, name: str, healthy: bool,
+                         error: Optional[str] = None) -> None:
+        """Record a software component's health transition (thread-safe).
+
+        The dyn watchdog escalates here after striking out on re-search
+        restarts: a degraded component is fleet-visible the same way a
+        dead node is, without conflating software state with hardware
+        heartbeats."""
+        with self._component_lock:
+            prev = self._components.get(name)
+            self._components[name] = ComponentHealth(
+                name=name, healthy=healthy,
+                error=None if healthy else error,
+                since=self.clock(),
+                reports=(prev.reports + 1) if prev else 1)
+
+    def component_health(self) -> dict[str, ComponentHealth]:
+        with self._component_lock:
+            return dict(self._components)
+
+    def degraded_components(self) -> list[str]:
+        with self._component_lock:
+            return sorted(n for n, c in self._components.items()
+                          if not c.healthy)
 
     # ----------------------------- detection ------------------------------
 

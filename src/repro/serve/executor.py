@@ -138,6 +138,11 @@ class PlanExecutor:
         self.swap_count = 0
         self.rejected_swaps = 0
         self.update_count = 0
+        # background-research watchdog (a repro.dyn manager): pumped from
+        # maybe_reload so the serving loop keeps its watchdog beating
+        self._research_monitor = None
+        self.research_alerts = 0
+        self._warned_research_dead = False
         self._lock = threading.Lock()
 
     # -- plan access -------------------------------------------------------
@@ -163,6 +168,14 @@ class PlanExecutor:
     # -- hot-swap ----------------------------------------------------------
     def attach_watch(self, watch) -> None:
         self._watch = watch
+
+    def attach_research_monitor(self, monitor) -> None:
+        """Attach a background-search watchdog (anything exposing
+        ``watchdog_tick()`` and ``stats()``, i.e. a
+        ``DynamicSparsityManager``). ``maybe_reload`` pumps it on every
+        poll, so a serving loop that only ever calls ``maybe_reload``
+        still detects and restarts a dead re-search thread."""
+        self._research_monitor = monitor
 
     def warmup(self, layer: Optional[SparseLinear] = None) -> None:
         """Compile a layer's dispatch at every bucket size (zeros input).
@@ -276,7 +289,22 @@ class PlanExecutor:
         """Poll the attached watch; swap and report True on a new plan.
         A plan that fails admission is rejected in place (warned, counted
         in ``rejected_swaps``) and the watch moves on — it will only be
-        retried when the store entry changes again."""
+        retried when the store entry changes again.
+
+        Also pumps an attached research monitor's watchdog: a restarted
+        background search bumps ``research_alerts``; a struck-out one
+        (``research_dead``) is warned about once."""
+        mon = self._research_monitor
+        if mon is not None:
+            if mon.watchdog_tick() is not None:
+                self.research_alerts += 1
+            if (not self._warned_research_dead
+                    and mon.stats().get("research_dead")):
+                self._warned_research_dead = True
+                warnings.warn(
+                    "background re-search struck out and was disabled; "
+                    "serving continues on the current plan (see the dyn "
+                    "manager's stats()['last_error'])", RuntimeWarning)
         if self._watch is None:
             return False
         plan = self._watch.poll()

@@ -5,6 +5,15 @@ The warm-store pipeline tests share one module-scoped fixture (a tiny
 swept PlanStore with a trained model saved next to it) so the expensive
 part — budgeted compiles — runs once.
 """
+import dataclasses
+import os
+import subprocess
+import sys
+import time
+import types
+import warnings
+from pathlib import Path
+
 import numpy as np
 import pytest
 
@@ -17,8 +26,8 @@ from repro.corpus.features import CORPUS_FEATURE_NAMES, matrix_features
 from repro.corpus.model import (CorpusModel, PSEUDO_LABELS,
                                 default_model_path, structure_label_of,
                                 train_from_store)
-from repro.corpus.sweep import (RECORDS_FILENAME, load_records, run_sweep,
-                                training_rows)
+from repro.corpus.sweep import (RECORDS_FILENAME, SweepRecord, load_records,
+                                run_sweep, training_rows)
 
 # per-compile budget for the sweep fixture: coarse-only, no cost model,
 # so every structure walk is timing-independent and seconds-cheap
@@ -197,3 +206,157 @@ def test_compile_portfolio_reuse_fast_path(warm_store):
     assert any(r.structure in ("warm", "reuse") for r in res.records)
     # reuse + learned predictions only — no full walk behind them
     assert res.n_evaluations <= 16
+
+
+# ---------------------- fleet sweeps: resume + fault domains ----------------
+
+def test_entry_fingerprint_deterministic():
+    a = synthetic_corpus("smoke")
+    fps = [e.fingerprint() for e in a]
+    assert fps == [e.fingerprint() for e in synthetic_corpus("smoke")]
+    assert len(set(fps)) == len(fps)            # resume keys never collide
+    assert all(len(fp) == 16 for fp in fps)
+    # the key is content-derived, not positional: same params => same key
+    assert a[0].fingerprint() == dataclasses.replace(a[0]).fingerprint()
+
+
+def test_load_records_tolerates_torn_tail_silently(tmp_path):
+    """A kill -9 mid-append leaves one partial final line with no trailing
+    newline — the expected crash shape, loaded without complaint."""
+    rec = SweepRecord(name="a", n_rows=1, n_cols=1, nnz=1, features=[],
+                      label_times={}, label=None, graph=None, gflops=None,
+                      wall_seconds=0.0, n_evaluations=0, failure_counts={},
+                      fingerprint="f" * 16)
+    p = tmp_path / RECORDS_FILENAME
+    p.write_text(rec.to_json() + "\n" + rec.to_json()[:37])   # torn append
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        loaded = load_records(p)
+    assert [r.name for r in loaded] == ["a"]
+
+
+def test_load_records_warns_on_malformed_interior_lines(tmp_path):
+    rec = SweepRecord(name="a", n_rows=1, n_cols=1, nnz=1, features=[],
+                      label_times={}, label=None, graph=None, gflops=None,
+                      wall_seconds=0.0, n_evaluations=0, failure_counts={})
+    p = tmp_path / RECORDS_FILENAME
+    p.write_text("{corrupt\n" + rec.to_json() + "\nalso not json\n")
+    with pytest.warns(UserWarning, match="2 malformed journal line"):
+        loaded = load_records(p)
+    assert [r.name for r in loaded] == ["a"]
+    # warn=False (the resume path) stays silent on the same file
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert len(load_records(p, warn=False)) == 1
+
+
+def test_run_sweep_resume_skips_journaled_entries(warm_store):
+    """Resuming over an already-complete journal is a no-op: zero compiles,
+    zero new journal lines."""
+    store, store_dir, entries, _, _ = warm_store
+    path = store_dir / RECORDS_FILENAME
+    n_lines = path.read_text().count("\n")
+    recs = run_sweep(entries, store, budget=_TINY, resume=True)
+    assert recs == []
+    assert path.read_text().count("\n") == n_lines
+
+
+def test_run_sweep_retries_transient_failures(tmp_path, monkeypatch):
+    import repro.api as api_mod
+    calls = {"n": 0}
+
+    def flaky_compile(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError(f"transient #{calls['n']}")
+        return types.SimpleNamespace(search_result=None, search_gflops=None,
+                                     graph_json=None)
+
+    monkeypatch.setattr(api_mod, "compile", flaky_compile)
+    store = types.SimpleNamespace(cache_dir=tmp_path)
+    entry = synthetic_corpus("smoke")[0]
+    t0 = time.perf_counter()
+    recs = run_sweep([entry], store, budget=_TINY, retries=3,
+                     retry_backoff_s=0.01)
+    assert time.perf_counter() - t0 < 30
+    assert calls["n"] == 3
+    assert len(recs) == 1 and recs[0].error is None
+    assert recs[0].attempts == 3
+    # the journal holds ONE line for the entry, not one per attempt
+    loaded = load_records(tmp_path / RECORDS_FILENAME)
+    assert len(loaded) == 1 and loaded[0].attempts == 3
+
+    # exhausted retries surface the last error, still exactly one record
+    calls["n"] = -10   # never reaches 3: every attempt raises
+    recs = run_sweep([entry], store, budget=_TINY, retries=2,
+                     retry_backoff_s=0.01)
+    assert recs[0].error and "transient" in recs[0].error
+    assert recs[0].attempts == 3                # 1 + 2 retries
+
+
+def test_run_sweep_isolate_mode_validation(tmp_path):
+    store = types.SimpleNamespace(cache_dir=tmp_path)
+    with pytest.raises(ValueError, match="unknown isolate mode"):
+        run_sweep([], store, isolate="thread")
+    with pytest.raises(ValueError, match="strategy \\*name\\*"):
+        run_sweep([], store, isolate="process",
+                  strategy=object())
+
+
+_KILL_SWEEP_SCRIPT = """
+import sys
+import repro
+from repro.core.search import SearchConfig
+from repro.corpus.datasets import synthetic_corpus
+from repro.corpus.sweep import run_sweep
+
+budget = SearchConfig(max_seconds=15, max_structures=2, coarse_samples=1,
+                      fine_eval_budget=0, timing_repeats=1,
+                      use_cost_model=False, seed=0)
+run_sweep(synthetic_corpus("smoke")[:3], repro.PlanStore(sys.argv[1]),
+          budget=budget)
+"""
+
+
+def test_sweep_sigkill_then_resume_no_duplicates(tmp_path):
+    """Satellite: kill -9 a live sweep, resume, and verify the journal —
+    every entry present exactly once, only the un-journaled tail re-swept."""
+    import signal
+    store_dir = tmp_path / "store"
+    journal = store_dir / RECORDS_FILENAME
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).parent.parent / "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _KILL_SWEEP_SCRIPT, str(store_dir)],
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL, env=env)
+    try:
+        deadline = time.monotonic() + 240
+        while time.monotonic() < deadline:
+            if journal.is_file() and journal.read_text().count("\n") >= 1:
+                break
+            if proc.poll() is not None:
+                raise RuntimeError("sweep child exited before it could "
+                                   "be killed mid-run")
+            time.sleep(0.05)
+        else:
+            raise RuntimeError("sweep child never journaled an entry")
+        proc.send_signal(signal.SIGKILL)
+    finally:
+        proc.kill()
+        proc.wait()
+    before = load_records(journal, warn=False)
+    n_before = len(before)
+    assert 1 <= n_before < 3, "child must die with the sweep in flight"
+
+    entries = synthetic_corpus("smoke")[:3]
+    store = repro.PlanStore(store_dir)
+    resumed = run_sweep(entries, store, budget=_TINY, resume=True)
+    assert len(resumed) == len(entries) - n_before
+    assert not any(r.error for r in resumed)
+
+    after = load_records(journal)          # warn=True: journal must be clean
+    assert len(after) == len(entries)
+    fps = [r.fingerprint for r in after]
+    assert len(set(fps)) == len(fps), "resume must never duplicate a record"
+    assert set(fps) == {e.fingerprint() for e in entries}

@@ -342,6 +342,165 @@ def test_manager_out_of_capacity_defers_and_recovers(base_plan):
     _assert_oracle(m2, mgr.plan)
 
 
+# ------------------------- watchdog: re-search fault domain ----------------
+
+def _drift_drop(m, frac=0.35, seed=0):
+    """Pure-removal mutation: always fits capacity, but drops enough nnz
+    to walk the stats past DriftPolicy's 1.3x fold-change."""
+    rng = np.random.default_rng(seed)
+    keep = np.ones(m.nnz, bool)
+    keep[rng.choice(m.nnz, int(m.nnz * frac), replace=False)] = False
+    m1 = SparseMatrix(m.n_rows, m.n_cols,
+                      np.asarray(m.rows)[keep],
+                      np.asarray(m.cols)[keep],
+                      np.asarray(m.vals)[keep]).canonical()
+    return m1, PatternDelta.from_matrices(m, m1)
+
+
+def test_manager_research_failure_observable(base_plan, monkeypatch):
+    """Satellite regression: a raising re-search must not vanish into the
+    daemon thread — the traceback lands in stats()['last_error']."""
+    import repro.api as api_mod
+
+    def dying_compile(*a, **kw):
+        raise RuntimeError("injected research death")
+
+    monkeypatch.setattr(api_mod, "compile", dying_compile)
+    m, plan = base_plan
+    mgr = DynamicSparsityManager(m, plan, max_research_strikes=2,
+                                 research_backoff_s=0.01,
+                                 research_deadline_s=8.0)
+    try:
+        m1, d = _drift_drop(m)
+        out = mgr.apply(d)
+        assert out["action"] == "update+research"
+        assert mgr.join(timeout=30.0)
+        st = mgr.stats()
+        assert st["researches_failed"] >= 1
+        assert st["last_error"] is not None
+        assert "injected research death" in st["last_error"]
+        assert "Traceback" in st["last_error"]        # full tb, not repr()
+        assert st["research_strikes"] >= 1
+        assert mgr.quiesce(timeout=30.0)
+    finally:
+        mgr.quiesce(timeout=30.0)
+    # both strikes consumed: retried once, then struck out
+    st = mgr.stats()
+    assert st["research_dead"] and st["watchdog_restarts"] == 1
+    assert st["researches_failed"] == 2
+    # the live (patched) plan kept serving exactly throughout
+    _assert_oracle(m1, mgr.plan)
+
+
+def test_manager_watchdog_restarts_and_lands(base_plan, monkeypatch):
+    """One injected death, then the real compile: the owner-thread pump
+    restarts the search with backoff and the retry lands + publishes."""
+    import repro.api as api_mod
+    real_compile = api_mod.compile
+    deaths = {"n": 0}
+
+    def flaky_compile(*a, **kw):
+        if deaths["n"] < 1:
+            deaths["n"] += 1
+            raise RuntimeError("transient research death")
+        return real_compile(*a, **kw)
+
+    monkeypatch.setattr(api_mod, "compile", flaky_compile)
+    m, plan = base_plan
+    mgr = DynamicSparsityManager(
+        m, plan, max_research_strikes=3, research_backoff_s=0.05,
+        research_budget=SearchConfig(max_seconds=2, max_structures=2),
+        research_deadline_s=8.0)
+    try:
+        m1, d = _drift_drop(m)
+        assert mgr.apply(d)["action"] == "update+research"
+        adopted = None
+        deadline = 120.0
+        import time as _time
+        t0 = _time.monotonic()
+        while _time.monotonic() - t0 < deadline:
+            res = mgr.poll()                 # pumps watchdog_tick()
+            if res and res["action"] == "adopted":
+                adopted = res
+                break
+            _time.sleep(0.01)
+        assert adopted is not None, "watchdog retry never landed"
+    finally:
+        mgr.quiesce(timeout=120.0)
+    st = mgr.stats()
+    assert deaths["n"] == 1 and st["researches_failed"] == 1
+    assert st["watchdog_restarts"] == 1
+    assert st["researches_landed"] >= 1
+    assert not st["research_dead"]
+    assert st["research_strikes"] == 0       # landing clears the strikes
+    assert "(watchdog retry 1)" in st["last_research_reason"]
+    _assert_oracle(mgr.matrix, mgr.plan)
+
+
+def test_manager_strikeout_escalates_to_ft(base_plan, monkeypatch):
+    """After max_research_strikes consecutive failures the manager stops
+    retrying and reports dyn-research unhealthy to the ft machine."""
+    from repro.ft import FaultToleranceManager
+    import repro.api as api_mod
+    monkeypatch.setattr(
+        api_mod, "compile",
+        lambda *a, **kw: (_ for _ in ()).throw(RuntimeError("always dies")))
+    m, plan = base_plan
+    ft = FaultToleranceManager()
+    mgr = DynamicSparsityManager(m, plan, ft=ft, max_research_strikes=2,
+                                 research_backoff_s=0.01,
+                                 research_deadline_s=8.0)
+    try:
+        m1, d = _drift_drop(m)
+        mgr.apply(d)
+        assert mgr.quiesce(timeout=30.0)
+    finally:
+        mgr.quiesce(timeout=30.0)
+    st = mgr.stats()
+    assert st["research_dead"] and not st["retry_pending"]
+    assert st["researches_failed"] == 2      # initial + 1 watchdog retry
+    assert "dyn-research" in ft.degraded_components()
+    health = ft.component_health()["dyn-research"]
+    assert not health.healthy and "always dies" in health.error
+    # dead means dead: further drift must not resurrect the thread
+    started = st["researches_started"]
+    mgr.apply(PatternDelta.from_matrices(m1, _mutate(m1, seed=21, n_add=0)))
+    assert mgr.stats()["researches_started"] == started
+    # serving still exact on the patched lineage
+    _assert_oracle(mgr.matrix, mgr.plan)
+
+
+def test_executor_surfaces_dead_research(base_plan, monkeypatch):
+    """A serving loop that only calls maybe_reload() still observes the
+    struck-out background search (warned once, alerts counted)."""
+    import warnings as _warnings
+    import repro.api as api_mod
+    monkeypatch.setattr(
+        api_mod, "compile",
+        lambda *a, **kw: (_ for _ in ()).throw(RuntimeError("dead")))
+    m, plan = base_plan
+    ex = PlanExecutor(plan, matrix=m)
+    mgr = DynamicSparsityManager(m, plan, executor=ex,
+                                 max_research_strikes=1,
+                                 research_backoff_s=0.01,
+                                 research_deadline_s=8.0)
+    assert ex._research_monitor is mgr       # auto-attached by the manager
+    try:
+        _, d = _drift_drop(m)
+        mgr.apply(d)
+        assert mgr.join(timeout=30.0)
+        assert mgr.quiesce(timeout=30.0)
+    finally:
+        mgr.quiesce(timeout=30.0)
+    assert mgr.stats()["research_dead"]
+    with pytest.warns(RuntimeWarning, match="struck out"):
+        ex.maybe_reload()
+    # warned exactly once; later polls stay quiet
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        ex.maybe_reload()
+
+
 # ------------------------- MoE routing churn (satellite 3) -----------------
 
 def test_moe_routing_churn_patches_in_place():

@@ -10,15 +10,18 @@ load; these tests pin the unit semantics.
 """
 import math
 import time
+import warnings
+from concurrent.futures import ThreadPoolExecutor
 
+import jax
 import numpy as np
 import pytest
 
 import repro
-from repro.api import PlanIntegrityError, load_plan
+from repro.api import PlanIntegrityError, ShardedSpmvPlan, load_plan
 from repro.core.matrices import banded_matrix
 from repro.core.search import (FAILURE_BUCKETS, SearchConfig, fault_hook,
-                               run_search)
+                               run_search, sleep_checking_deadline)
 from repro.design.space import DesignSpace
 from repro.ft.manager import FaultToleranceManager
 from repro.serve import (MatvecRequest, PlanExecutor, ServeConfig,
@@ -168,6 +171,132 @@ def test_no_faults_means_no_behavior_change(matrix):
     assert not res_a.fallback and res_a.n_quarantined == 0
     hard = {"crash", "oom", "timeout", "wrong_result"}
     assert not hard & set(res_a.failure_counts)
+
+
+def test_pooled_search_timeout_fires_off_main_thread(matrix):
+    """Acceptance: per-candidate timeouts fire inside ThreadPoolExecutor
+    searches. A planted hang on a pool thread (where SIGALRM is a no-op)
+    is killed by the cooperative deadline and recorded as a `timeout`
+    EvalRecord — the pooled search is bounded, not hung."""
+    def hook(graph, y):
+        sleep_checking_deadline(60.0)
+
+    t0 = time.perf_counter()
+    with fault_hook(hook), warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        with ThreadPoolExecutor(max_workers=1,
+                                thread_name_prefix="shard-search") as pool:
+            res = pool.submit(run_search, matrix,
+                              _cfg(candidate_timeout_s=0.3)).result(120)
+    wall = time.perf_counter() - t0
+    assert res.failure_counts.get("timeout", 0) >= 1
+    assert any(r.status == "timeout" for r in res.failed_records)
+    assert wall < 30, f"pool-thread hang was not bounded: {wall:.1f}s"
+
+
+def test_off_main_deadline_warns_once_about_missing_backstop(matrix,
+                                                             monkeypatch):
+    """Satellite: arming a deadline off the main thread says so (once per
+    process) instead of silently dropping the SIGALRM backstop."""
+    import sys
+    search_mod = sys.modules["repro.core.search"]
+    monkeypatch.setattr(search_mod, "_WARNED_NO_BACKSTOP", False)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        with ThreadPoolExecutor(max_workers=1) as pool:
+            pool.submit(run_search, matrix,
+                        _cfg(candidate_timeout_s=5.0)).result(120)
+    msgs = [w for w in caught if "SIGALRM backstop" in str(w.message)]
+    assert len(msgs) == 1
+    # second pooled search: the process-wide flag suppresses a repeat
+    with warnings.catch_warnings(record=True) as caught2:
+        warnings.simplefilter("always")
+        with ThreadPoolExecutor(max_workers=1) as pool:
+            pool.submit(run_search, matrix,
+                        _cfg(candidate_timeout_s=5.0)).result(120)
+    assert not [w for w in caught2 if "SIGALRM backstop" in str(w.message)]
+
+
+# ------------------------------- dist plane ---------------------------------
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _dist_cfg(**kw):
+    from repro.dist.search import ShardedSearchConfig
+    return ShardedSearchConfig(
+        search=SearchConfig(max_seconds=20, max_structures=2,
+                            coarse_samples=1, fine_eval_budget=0,
+                            timing_repeats=1, use_cost_model=False, seed=7),
+        min_nnz_for_search=1, **kw)
+
+
+def test_shard_search_failure_degrades_to_baseline(matrix):
+    """A shard whose search raises gets the baseline program substituted:
+    the compile degrades (fallback counted, shard reported failed) but
+    the sharded program stays oracle-exact."""
+    from repro.dist.search import dist_search, shard_fault_hook
+
+    def crash(shard):
+        raise RuntimeError("injected shard crash")
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        with shard_fault_hook(crash):
+            res = dist_search(matrix, _mesh1(), _dist_cfg())
+    assert res.failed_shards() == [0]
+    rep = res.reports[0]
+    assert rep.failed and not rep.searched
+    assert rep.failure == "crash" and "injected shard crash" in rep.error
+    assert res.failure_counts.get("fallback") == 1
+    x = np.ones(matrix.n_cols, np.float32)
+    assert np.allclose(np.asarray(res.program(x)),
+                       matrix.spmv_dense_oracle(x), atol=1e-3)
+
+
+def test_sharded_plan_failure_counts_roundtrip(matrix, tmp_path):
+    """Aggregated failure_counts land on the ShardedSpmvPlan, survive
+    save/load, survive pytree flatten/unflatten, and show in describe()."""
+    from repro.dist.search import dist_search, shard_fault_hook
+
+    mesh = _mesh1()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        with shard_fault_hook(lambda s: (_ for _ in ()).throw(
+                MemoryError("injected shard oom"))):
+            res = dist_search(matrix, mesh, _dist_cfg())
+    assert res.reports[0].failure == "oom"
+    target = repro.Target(mesh=mesh)
+    plan = ShardedSpmvPlan.from_program(res.program, target,
+                                        search_result=res)
+    counts = dict(plan.failure_counts)
+    assert counts.get("fallback") == 1
+    assert "shard-search failures:" in plan.describe()
+    p = tmp_path / "sharded.plan.npz"
+    plan.save(p)
+    loaded = load_plan(p, mesh=mesh)
+    assert dict(loaded.failure_counts) == counts
+    leaves, treedef = jax.tree_util.tree_flatten(plan)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.failure_counts == plan.failure_counts
+    x = np.ones(matrix.n_cols, np.float32)
+    assert np.allclose(np.asarray(loaded(x)),
+                       matrix.spmv_dense_oracle(x), atol=1e-3)
+
+
+def test_ft_component_health():
+    ft = FaultToleranceManager()
+    assert ft.component_health() == {} and ft.degraded_components() == []
+    ft.report_component("dyn-research", healthy=False, error="Traceback ...")
+    assert ft.degraded_components() == ["dyn-research"]
+    health = ft.component_health()["dyn-research"]
+    assert not health.healthy and "Traceback" in health.error
+    assert health.reports == 1
+    ft.report_component("dyn-research", healthy=True)
+    assert ft.degraded_components() == []
+    assert ft.component_health()["dyn-research"].reports == 2
+    assert ft.component_health()["dyn-research"].error is None
 
 
 # ------------------------------- store plane --------------------------------
